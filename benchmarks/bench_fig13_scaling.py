@@ -1,0 +1,68 @@
+"""Paper Fig. 13 — weak scaling with / without the final barrier.
+
+Weak scaling on TPU: per-chip workload fixed (one matmul-suite round per
+chip), chips swept 1 -> 256. Step time = max(compute, memory) + gradient
+all-reduce (the "final synchronization barrier"); the without-barrier curve
+drops the collective. Mirrors the paper's finding: compute-intense kernels
+stay near-ideal, low-intensity ones lose ~25% to synchronization.
+"""
+
+from __future__ import annotations
+
+from repro.core import mesh as hw
+from repro.core.interconnect import CollectiveModel
+
+import math
+
+KERNELS = {
+    # per-chip flops, per-chip HBM bytes, reduced bytes (the barrier payload)
+    # the paper's kernels end in a *synchronization* barrier, not a
+    # gradient reduction — only dotp reduces (its scalar result)
+    "matmul": (2 * 2048 ** 3, 3 * 2048 * 2048 * 2, 0),
+    "2dconv": (2 * 9 * 4096 * 4096, 2 * 4096 * 4096 * 2, 0),
+    "dct": (4 * (4096 * 4096 // 64) * 8 ** 3, 2 * 4096 * 4096 * 2, 0),
+    "axpy": (2 * (1 << 22), 3 * (1 << 22) * 2, 0),
+    "dotp": (2 * (1 << 22), 2 * (1 << 22) * 2, 4),
+}
+
+BARRIER_ALPHA = 1e-6       # per-hop latency of the sync tree
+
+
+def step_time(flops, bytes_, reduce_bytes, n_chips, with_barrier=True):
+    compute = flops / hw.PEAK_FLOPS_BF16
+    memory = bytes_ / hw.HBM_BW
+    t = max(compute, memory)
+    if with_barrier and n_chips > 1:
+        # final synchronization barrier: tree latency + reduce payload
+        t += 2 * math.log2(n_chips) * BARRIER_ALPHA
+        if reduce_bytes:
+            # two-stage reduction over the 2-D mesh (not a single big ring)
+            a = 2 ** (int(math.log2(n_chips)) // 2)
+            b = n_chips // a
+            topo = hw.v5e_topology((a, b), ("data", "model"))
+            cm = CollectiveModel(topo)
+            t += cm.all_reduce(reduce_bytes, "data").seconds
+            t += cm.all_reduce(reduce_bytes / a, "model").seconds
+    return t
+
+
+def main() -> list[str]:
+    lines = []
+    for name, (flops, bytes_, red) in KERNELS.items():
+        t1 = step_time(flops, bytes_, red, 1, with_barrier=False)
+        for n in (4, 16, 64, 256):
+            tb = step_time(flops, bytes_, red, n, with_barrier=True)
+            tn = step_time(flops, bytes_, red, n, with_barrier=False)
+            # weak scaling: ideal speedup = n
+            sp_b = n * t1 / tb
+            sp_n = n * t1 / tn
+            if n == 256:
+                lines.append(
+                    f"fig13/{name}@256,0,"
+                    f"speedup_frac_with_barrier={sp_b / n:.3f};"
+                    f"without={sp_n / n:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,38 @@
+"""Paper Fig. 14 — where the cycles go, per (arch x shape).
+
+The paper splits core activity into compute / control / stalls. Our roofline
+split per dry-run cell: compute term share, memory term share, collective
+term share (reads results/dryrun/*.json written by launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def main() -> list[str]:
+    lines = []
+    if not RESULTS.exists():
+        return ["fig14/breakdown,0,skipped(no dry-run results)"]
+    for p in sorted(RESULTS.glob("*__single.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok" or d.get("variant"):
+            continue
+        r = d["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        if total <= 0:
+            continue
+        lines.append(
+            f"fig14/{d['arch']}/{d['shape']},0,"
+            f"compute={r['compute_s'] / total:.3f};"
+            f"memory={r['memory_s'] / total:.3f};"
+            f"collective={r['collective_s'] / total:.3f};"
+            f"dominant={r['dominant'].replace('_s', '')}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,35 @@
+"""Paper Fig. 16 — cost of individual operations, local vs remote.
+
+The paper measures pJ/instruction and finds a remote load costs 1.8x a local
+one. The TPU analogue of "energy per access" is time-per-byte on each level
+of the hierarchy (HBM local, 1-hop ICI group, multi-hop ICI cluster, DCN
+pod), for one 32-bit word per lane. We report ns/KiB and the remote/local
+ratios, plus MAC-vs-load comparisons from the roofline constants.
+"""
+
+from __future__ import annotations
+
+from repro.core import mesh as hw
+
+
+def main() -> list[str]:
+    kib = 1024.0
+    local = kib / hw.HBM_BW                      # HBM
+    group = kib / (2 * hw.ICI_BW_PER_LINK)       # 1-hop neighbor
+    remote = 4 * 1e-6 / 8 + kib / hw.ICI_BW_PER_LINK   # multi-hop + α share
+    pod = kib / hw.DCN_BW_PER_HOST
+    mac = 2 * kib / 4 / hw.PEAK_FLOPS_BF16       # MACs on the same data
+    lines = [
+        f"fig16/local_load,{local * 1e9:.3f},ns_per_KiB(HBM)",
+        f"fig16/group_load,{group * 1e9:.3f},ns_per_KiB(ICI-1hop)",
+        f"fig16/remote_load,{remote * 1e9:.3f},ns_per_KiB(ICI-multihop)",
+        f"fig16/pod_load,{pod * 1e9:.3f},ns_per_KiB(DCN)",
+        f"fig16/mac,{mac * 1e9:.3f},ns_per_KiB_of_MACs",
+        f"fig16/remote_over_local,{group / local:.2f},ratio(paper=1.8x)",
+        f"fig16/pod_over_local,{pod / local:.1f},ratio",
+    ]
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

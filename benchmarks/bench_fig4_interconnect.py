@@ -1,0 +1,44 @@
+"""Paper Fig. 4 — topology throughput/latency vs injected load.
+
+Sweeps the Top_1 / Top_4 / Top_H models (core/interconnect.py) over load and
+reports the saturation points; the paper's numbers: Top_1 congests near
+0.10 req/core/cycle, Top_4 ~0.37, Top_H ~0.40, with Top_H average latency
+~6 cycles at 0.35 load.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.interconnect import TOP_1, TOP_4, TOP_H, TopologyModel
+
+
+def sweep(model: TopologyModel, loads) -> list[tuple[float, float, float]]:
+    return [(l, model.accepted_load(l), model.avg_latency(l)) for l in loads]
+
+
+def saturation_point(model: TopologyModel) -> float:
+    loads = np.linspace(0.01, 0.8, 200)
+    for l in loads:
+        if model.accepted_load(l) < 0.98 * l:
+            return float(l)
+    return float(loads[-1])
+
+
+def main() -> list[str]:
+    lines = []
+    for spec in (TOP_1, TOP_4, TOP_H):
+        m = TopologyModel(spec)
+        sat = saturation_point(m)
+        lat35 = m.avg_latency(0.35)
+        lines.append(f"fig4/{spec.name},0,"
+                     f"saturation={sat:.3f};latency@0.35={lat35:.2f}cyc")
+    # the paper's qualitative conclusion: Top_H wins
+    th = saturation_point(TopologyModel(TOP_H))
+    t1 = saturation_point(TopologyModel(TOP_1))
+    lines.append(f"fig4/conclusion,0,TopH/Top1_throughput={th / t1:.2f}x")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,98 @@
+"""Paper Table 1 — the kernel suite (matmul / 2dconv / dct / axpy / dotp).
+
+Measures wall time per call (interpret mode on CPU — functional numbers) and
+derives the quantities the paper reports per kernel: operation count,
+arithmetic intensity, and the projected TPU-v5e roofline utilization
+(min(peak_flops, intensity * HBM_bw) — the hardware-honest analogue of the
+paper's OP/cycle column; MemPool's 32-bit MACs count as 2 OPs there).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mesh as hw
+from repro.kernels import ops
+
+
+def timeit(fn, *args, reps: int = 3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def rows() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    out = []
+
+    # matmul 256x256 (paper size), bf16-on-TPU modeled as f32 here
+    n = 256
+    a = jax.random.normal(ks[0], (n, n), jnp.float32)
+    b = jax.random.normal(ks[1], (n, n), jnp.float32)
+    flops = 2 * n ** 3
+    bytes_ = 3 * n * n * 4
+    out.append(_row("matmul", f"{n}x{n}", lambda: ops.matmul(a, b, bm=128,
+                                                             bn=128, bk=128),
+                    flops, bytes_))
+
+    # 2dconv 96x1024 with 3x3 kernel (paper size)
+    img = jax.random.normal(ks[2], (96, 1024), jnp.float32)
+    w = jax.random.normal(ks[3], (3, 3), jnp.float32)
+    flops = 2 * 9 * 96 * 1024
+    bytes_ = 2 * 96 * 1024 * 4
+    out.append(_row("2dconv", "96x1024", lambda: ops.conv2d_3x3(img, w),
+                    flops, bytes_))
+
+    # dct 192x1024 image = 24576 8x8 blocks (paper size)
+    blocks = jax.random.normal(ks[4], (192 * 1024 // 64, 8, 8), jnp.float32)
+    nblk = blocks.shape[0]
+    flops = nblk * 2 * 2 * 8 ** 3          # two 8x8x8 matmuls per block
+    bytes_ = 2 * nblk * 64 * 4
+    out.append(_row("dct", "192x1024", lambda: ops.dct8x8(blocks), flops,
+                    bytes_))
+
+    # axpy / dotp over 98304 elements (paper size)
+    m = 98304 // 128
+    x = jax.random.normal(ks[5], (m, 128), jnp.float32)
+    y = jax.random.normal(ks[6], (m, 128), jnp.float32)
+    out.append(_row("axpy", "98304", lambda: ops.axpy(2.0, x, y),
+                    2 * 98304, 3 * 98304 * 4))
+    out.append(_row("dotp", "98304", lambda: ops.dotp(x, y),
+                    2 * 98304, 2 * 98304 * 4))
+    return out
+
+
+def _row(name, size, fn, flops, bytes_) -> dict:
+    us = timeit(lambda: fn()) * 1e6
+    intensity = flops / bytes_
+    roof = min(hw.PEAK_FLOPS_BF16, intensity * hw.HBM_BW)
+    # paper comparison: measured OP/cycle fraction of MemPool's 512 peak
+    paper_frac = {"matmul": 285 / 512, "2dconv": 336 / 512, "dct": 168 / 512,
+                  "axpy": 90 / 512, "dotp": 92 / 512}[name]
+    return {"name": f"table1/{name}", "size": size, "us_per_call": us,
+            "flops": flops, "intensity": intensity,
+            "tpu_roofline_flops": roof,
+            "tpu_roofline_frac": roof / hw.PEAK_FLOPS_BF16,
+            "mempool_frac": paper_frac}
+
+
+def main() -> list[str]:
+    lines = []
+    for r in rows():
+        lines.append(
+            f"{r['name']},{r['us_per_call']:.1f},"
+            f"intensity={r['intensity']:.2f};roof_frac="
+            f"{r['tpu_roofline_frac']:.3f};mempool_frac={r['mempool_frac']:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

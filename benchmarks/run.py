@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows, exactly one section per paper
+artifact (Table 1, Fig. 4, 5, 13, 14, 15, 16). Modules degrade gracefully
+when optional inputs (dry-run results) are absent.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks import (bench_fig4_interconnect, bench_fig5_hybrid,  # noqa: E402
+                        bench_fig13_scaling, bench_fig14_breakdown,
+                        bench_fig15_double_buffer, bench_fig16_energy,
+                        bench_table1_kernels)
+
+MODULES = [
+    ("table1", bench_table1_kernels),
+    ("fig4", bench_fig4_interconnect),
+    ("fig5", bench_fig5_hybrid),
+    ("fig13", bench_fig13_scaling),
+    ("fig14", bench_fig14_breakdown),
+    ("fig15", bench_fig15_double_buffer),
+    ("fig16", bench_fig16_energy),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in MODULES:
+        t0 = time.perf_counter()
+        try:
+            for line in mod.main():
+                print(line)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

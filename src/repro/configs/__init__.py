@@ -1,0 +1,2 @@
+from .registry import (ARCHS, SHAPES, ArchConfig, ShapeConfig,  # noqa: F401
+                       cell_supported, get, input_specs, smoke)

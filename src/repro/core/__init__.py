@@ -1,0 +1,12 @@
+"""repro.core — MemPool's contributions as composable JAX modules.
+
+- mesh:         hierarchical machine topology (tile/group/cluster → chip/ICI/pod)
+- addressing:   hybrid addressing scheme → Region-policy sharding planner
+- interconnect: Top_H topology model + α–β collective cost model
+- locality:     HLO collective parser (p_local measurement, roofline terms)
+- overlap:      latency-tolerance helpers (scanned layers, sharding hints)
+"""
+
+from . import addressing, interconnect, locality, mesh, overlap  # noqa: F401
+from .addressing import AddressMap, AxisRules, Region, default_rules  # noqa: F401
+from .mesh import Topology, v5e_topology  # noqa: F401

@@ -1,0 +1,229 @@
+"""Hybrid addressing scheme — MemPool §3.2 — as a sharding planner.
+
+Two layers live here:
+
+1. The *faithful* artifact: MemPool's address scrambler (paper Fig. 3), a
+   bijective bit permutation that carves per-tile *sequential regions* out of
+   a word-interleaved memory map. We implement it exactly (and property-test
+   that it is a bijection and that sequential addresses stay within one tile).
+   It is used by the Fig.-4/5 benchmarks and documents the technique.
+
+2. The *TPU adaptation*: a Region-policy sharding planner. Every tensor in a
+   step is assigned a `Region`:
+
+     SEQUENTIAL  — private data (activations, optimizer shards, KV caches):
+                   placed so its owner chip holds it wholly locally; access
+                   costs zero collective bytes (the paper's local-tile hit).
+     INTERLEAVED — shared data (weights): spread over the whole machine
+                   (FSDP x TP); access is an all-gather = the paper's
+                   remote-tile request through Top_H.
+     REPLICATED  — small read-only constants (the RO-cache analogue).
+
+   The planner lowers logical-axis annotations to GSPMD PartitionSpecs on the
+   hierarchical mesh, checking divisibility and axis-conflicts, which is the
+   moral equivalent of the paper's "wire crossing and a multiplexer".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ----------------------------------------------------------------------------
+# 1. Paper-faithful address scrambler (Fig. 3)
+# ----------------------------------------------------------------------------
+
+BYTE_BITS = 2  # 32-bit words
+
+
+@dataclasses.dataclass(frozen=True)
+class AddressMap:
+    """MemPool L1 address layout: [row | tile(t) | bank(b) | byte(2)].
+
+    `seq_rows_bits` (s) rows of every tile's banks form its sequential region;
+    the first 2**(t+s+b+2) bytes of the address space are sequential.
+    """
+    tile_bits: int = 6     # t: 64 tiles
+    bank_bits: int = 4     # b: 16 banks/tile
+    seq_rows_bits: int = 4  # s: 2**s rows per bank are sequential
+
+    @property
+    def seq_region_bytes(self) -> int:
+        return 1 << (self.tile_bits + self.seq_rows_bits + self.bank_bits + BYTE_BITS)
+
+    def scramble(self, addr):
+        """Logical (hybrid-map) address -> physical address (Fig. 3).
+
+        The physical routing is hardwired: bits [2, 2+b) select the bank,
+        bits [2+b, 2+b+t) the tile. In the hybrid map the programmer's
+        sequential region is laid out [.. | tile | row_s | bank | byte]:
+        each tile owns 2^(s+b+2) contiguous logical bytes. The scrambler
+        (a wire crossing + mux) swaps the (tile, row_s) fields so those
+        contiguous addresses land in one physical tile while staying
+        bank-interleaved within it. Outside the region: identity.
+        """
+        addr = np.asarray(addr, dtype=np.int64)
+        t, b, s = self.tile_bits, self.bank_bits, self.seq_rows_bits
+        lo = b + BYTE_BITS            # first bit above [bank|byte]
+        in_seq = addr < self.seq_region_bytes
+
+        keep_low = addr & ((1 << lo) - 1)
+        row_f = (addr >> lo) & ((1 << s) - 1)        # logical row-in-tile
+        tile_f = (addr >> (lo + s)) & ((1 << t) - 1)  # logical tile chunk
+        high = addr >> (lo + t + s)
+        phys = (high << (lo + t + s)) | (row_f << (lo + t)) | \
+            (tile_f << lo) | keep_low
+        return np.where(in_seq, phys, addr)
+
+    def descramble(self, addr):
+        """Inverse permutation (physical -> logical)."""
+        addr = np.asarray(addr, dtype=np.int64)
+        t, b, s = self.tile_bits, self.bank_bits, self.seq_rows_bits
+        lo = b + BYTE_BITS
+        in_seq = addr < self.seq_region_bytes
+
+        keep_low = addr & ((1 << lo) - 1)
+        tile_f = (addr >> lo) & ((1 << t) - 1)
+        row_f = (addr >> (lo + t)) & ((1 << s) - 1)
+        high = addr >> (lo + t + s)
+        logical = (high << (lo + t + s)) | (tile_f << (lo + s)) | \
+            (row_f << lo) | keep_low
+        return np.where(in_seq, logical, addr)
+
+    def tile_of(self, addr) -> np.ndarray:
+        """Physical tile servicing a *physical* (post-scramble) address —
+        the hardwired interconnect routing field."""
+        addr = np.asarray(addr, dtype=np.int64)
+        lo = self.bank_bits + BYTE_BITS
+        return (addr >> lo) & ((1 << self.tile_bits) - 1)
+
+
+# ----------------------------------------------------------------------------
+# 2. Region-policy sharding planner (the TPU adaptation)
+# ----------------------------------------------------------------------------
+
+class Region(enum.Enum):
+    SEQUENTIAL = "sequential"    # private -> owner-local, collective-free
+    INTERLEAVED = "interleaved"  # shared  -> spread machine-wide (FSDP x TP)
+    REPLICATED = "replicated"    # RO consts -> every chip has a copy
+
+
+@dataclasses.dataclass
+class AxisRules:
+    """Logical-axis -> mesh-axes mapping, parameterized by region policy.
+
+    `rules` maps a logical axis name to a mesh axis (or tuple of axes, or
+    None). Built by `default_rules`; hillclimbs in EXPERIMENTS.md §Perf edit
+    these knobs rather than touching model code.
+    """
+    rules: Mapping[str, Any]
+
+    def spec_for(self, logical_axes: Sequence[str | None],
+                 shape: Sequence[int], mesh: Mesh) -> P:
+        used: set[str] = set()
+        parts = []
+        for dim, name in zip(shape, logical_axes):
+            axes = self.rules.get(name) if name else None
+            axes = _normalize(axes)
+            # drop mesh axes already used by an earlier dim, or that don't
+            # divide this dim — the planner's "multiplexer" fallback.
+            kept = []
+            size = 1
+            for ax in axes:
+                if ax in used or ax not in mesh.axis_names:
+                    continue
+                nxt = size * mesh.shape[ax]
+                if dim % nxt != 0:
+                    continue
+                kept.append(ax)
+                used.add(ax)
+                size = nxt
+            parts.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+
+def _normalize(axes) -> tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = True, seq_shard: bool = False,
+                  zero1: bool = True, expert_axis: str | None = None,
+                  overrides=()) -> AxisRules:
+    """The framework's hybrid memory map, as logical-axis rules.
+
+    INTERLEAVED logical axes (weights):
+      embed   -> data axis when fsdp (weights spread over the DP "banks")
+      ffn/heads/vocab/qkv -> model axis (TP)
+    SEQUENTIAL logical axes (private data):
+      batch -> (pod, data): each chip owns its slice outright
+      seq   -> data only when seq_shard (sequence parallelism for prefill)
+      kv_heads -> model (KV cache sharded with its producer)
+    """
+    has_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    rules = {
+        # --- SEQUENTIAL region ---
+        "batch": batch_axes,
+        "seq": ("data",) if seq_shard else None,
+        # decode KV caches: shard the cache sequence over `model` — the
+        # cache is the dominant decode footprint (tens of GB/chip if left
+        # replicated); attention over the sharded dim costs one tiny
+        # all-reduce of (B, H, 1) partials per layer.
+        "kv_seq": "model",
+        "state": None,
+        # --- INTERLEAVED region ---
+        "embed": batch_axes if fsdp else None,   # FSDP shard dim
+        "vocab": "model",
+        "ffn": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "qkv": "model",
+        "expert": expert_axis,                   # None -> TP-within-expert
+        "conv": None,
+        "layers": None,                          # scanned-stack dim stays whole
+        # --- REPLICATED ---
+        "norm": None,
+        None: None,
+    }
+    if zero1:
+        # optimizer moments follow the param spec (they inherit logical axes),
+        # which under fsdp already spreads them over `data` — ZeRO-1 for free.
+        pass
+    rules.update(dict(overrides))
+    return AxisRules(rules=rules)
+
+
+def sharding_for(logical_axes: Sequence[str | None], shape: Sequence[int],
+                 mesh: Mesh, rules: AxisRules) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec_for(logical_axes, shape, mesh))
+
+
+def plan_tree(abstract_tree: Any, logical_tree: Any, mesh: Mesh,
+              rules: AxisRules) -> Any:
+    """Map a pytree of ShapeDtypeStructs + logical-axis tuples to shardings."""
+    def one(abstract, logical):
+        return sharding_for(logical, abstract.shape, mesh, rules)
+    return jax.tree.map(one, abstract_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def spec_tree(abstract_tree: Any, logical_tree: Any, mesh: Mesh,
+              rules: AxisRules) -> Any:
+    """Same as plan_tree but returns raw PartitionSpecs (for in_shardings)."""
+    def one(abstract, logical):
+        return rules.spec_for(logical, abstract.shape, mesh)
+    return jax.tree.map(one, abstract_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,467 @@
+"""Loop-aware HLO cost analyzer — exact roofline terms from compiled text.
+
+Why this exists: `compiled.cost_analysis()` visits a `while` body ONCE, so a
+scanned-layer program (the only way to compile 512-chip programs of 60-100
+layer models in reasonable time) under-reports FLOPs/bytes by ~L x. XLA's
+compiled text carries `backend_config={"known_trip_count":{"n":...}}` on every
+canonicalized while loop, so an instruction-level walk can weight each loop
+body by its true trip count, recursively (nested scans: layers x attention
+chunks x grad-accumulation microbatches).
+
+Accounting rules:
+  flops      — dot: 2 * prod(result) * prod(lhs contracting dims);
+               elementwise/compare/select: prod(result); reduce: prod(operand).
+  bytes      — operands + results at *fusion boundaries* only (fusion
+               internals stay on-chip, the TPU VMEM model); control ops
+               (tuple/GTE/parameter/bitcast/constant) are free.
+  collectives— per-kind operand/wire bytes (same algebra as core.locality),
+               weighted by enclosing trip counts.
+
+Everything is derived from `compiled.as_text()` — the dry-run's "profile".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+from .locality import _DTYPE_BYTES, _group_size, _op_bytes
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(?P<rtype>\([^)]*\)|\S+)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>.*)$")
+_SHAPE = re.compile(r"(?:pred|[a-z]\d+[a-z0-9]*)\[[\d,]*\]")
+_SHAPE_PARSE = re.compile(r"(?P<dt>pred|[a-z]\d+[a-z0-9]*)\[(?P<dims>[\d,]*)\]")
+_TRIP = re.compile(r'known_trip_count\\?"?:\{\\?"?n\\?"?:\\?"?(\d+)')
+_CALLS = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "and", "or", "xor", "not", "compare", "select", "clamp", "abs", "negate",
+    "sign", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "remainder", "atan2", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical",
+}
+TRANSCENDENTAL = {"exponential", "exp", "log", "log-plus-one", "logistic",
+                  "tanh", "sqrt", "rsqrt", "cbrt", "sine", "cosine", "tan",
+                  "expm1", "erf"}
+FREE = {"tuple", "get-tuple-element", "parameter", "bitcast", "constant",
+        "after-all", "opt-barrier", "partition-id", "replica-id", "domain",
+        "bitcast-convert"}
+COLLECTIVES = {"all-gather", "all-gather-start", "all-reduce",
+               "all-reduce-start", "reduce-scatter", "all-to-all",
+               "ragged-all-to-all", "collective-permute",
+               "collective-permute-start", "collective-broadcast"}
+NO_BYTES = FREE | {"all-gather-done", "all-reduce-done",
+                   "collective-permute-done", "copy-done", "copy-start"}
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_PARSE.finditer(type_str):
+        dims = tuple(int(d) for d in m.group("dims").split(",")) \
+            if m.group("dims").strip() else ()
+        out.append((m.group("dt"), dims))
+    return out
+
+
+def _nbytes(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+def _nelems(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    rtype: str
+    rest: str      # operand list + attrs (raw tail of the line)
+
+    @property
+    def result_shapes(self):
+        return _parse_shapes(self.rtype)
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    coll_operand_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: [0, 0.0, 0.0]))
+
+    def scaled_add(self, other: "Costs", k: float):
+        self.flops += other.flops * k
+        self.transcendentals += other.transcendentals * k
+        self.bytes += other.bytes * k
+        self.coll_operand_bytes += other.coll_operand_bytes * k
+        self.coll_wire_bytes += other.coll_wire_bytes * k
+        for kind, (c, ob, wb) in other.coll_by_kind.items():
+            e = self.coll_by_kind[kind]
+            e[0] += c * k
+            e[1] += ob * k
+            e[2] += wb * k
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "transcendentals": self.transcendentals,
+                "bytes": self.bytes,
+                "collective_operand_bytes": self.coll_operand_bytes,
+                "collective_wire_bytes": self.coll_wire_bytes,
+                "collectives": {k: {"count": v[0], "operand_bytes": v[1],
+                                    "wire_bytes": v[2]}
+                                for k, v in sorted(self.coll_by_kind.items())}}
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._memo: dict[str, Costs] = {}
+
+    def _parse(self, text: str):
+        cur: list[Instr] | None = None
+        for line in text.splitlines():
+            hdr = _COMP_HDR.match(line.strip())
+            if hdr and ("->" in line):
+                name = hdr.group(1)
+                cur = []
+                self.computations[name] = cur
+                if line.strip().startswith("ENTRY"):
+                    self.entry = name
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR.match(line)
+            if m:
+                cur.append(Instr(m.group(1), m.group("op"), m.group("rtype"),
+                                 m.group("operands")))
+
+    # -- helpers ------------------------------------------------------------
+    def _shape_table(self, instrs) -> dict[str, list]:
+        return {i.name: i.result_shapes for i in instrs}
+
+    def _operand_names(self, instr: Instr) -> list[str]:
+        # operand names appear before attrs; attrs also contain %computation
+        # references, so cut at the closing paren of the operand list.
+        depth, end = 1, len(instr.rest)
+        for idx, ch in enumerate(instr.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = idx
+                    break
+        return _OPERAND_NAME.findall(instr.rest[:end])
+
+    def _operand_shapes(self, instr: Instr, table) -> list:
+        shapes = []
+        for n in self._operand_names(instr):
+            shapes.extend(table.get(n, []))
+        return shapes
+
+    def _operands_split(self, instr: Instr, table) -> list[list]:
+        return [table.get(n, []) for n in self._operand_names(instr)]
+
+    def _is_inplace_update_fusion(self, comp_name: str) -> bool:
+        """Fusion whose root is a dynamic-update-slice (in-place write)."""
+        for ins in self.computations.get(comp_name, []):
+            if ins.op == "dynamic-update-slice":
+                return True
+        return False
+
+    def _fusion_bytes(self, ins: Instr, called: str | None, table) -> float:
+        """Boundary bytes of a fusion with slice-aware semantics.
+
+        XLA fuses `dynamic-slice(stacked_buffer)` into consumers and
+        `dynamic-update-slice` into producers; the buffer then appears as a
+        full-sized operand/result of the fusion even though only one slice
+        is touched per call. We map fusion operands to the fused
+        computation's parameters: a param consumed only by dynamic-slice
+        ops is charged its slice bytes; the aliased DUS target is charged
+        the update bytes. Everything else is charged in full.
+        """
+        rshapes = ins.result_shapes
+        operand_names = self._operand_names(ins)
+        if called not in self.computations:
+            return _nbytes(rshapes) + sum(
+                _nbytes(table.get(n, [])) for n in operand_names)
+        comp = self.computations[called]
+        ctable = self._shape_table(comp)
+        # ops that do not force a boundary materialization of their own:
+        # convert included — the convert(DUS(convert(x),u)) residual-save
+        # pattern is emitted in place on TPU.
+        TRANSPARENT = {"bitcast", "reshape", "transpose", "copy", "convert"}
+        # parameter index -> internal name
+        param_name: dict[int, str] = {}
+        for c in comp:
+            if c.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", "parameter(" + c.rest)
+                if m:
+                    param_name[int(m.group(1))] = c.name
+        # usage map: internal name -> consuming instrs
+        uses: dict[str, list[Instr]] = defaultdict(list)
+        by_name = {c.name: c for c in comp}
+        for c in comp:
+            for n in self._operand_names(c):
+                uses[n].append(c)
+
+        def resolve_root(name: str) -> str:
+            """Follow bitcast-like chains back to their source name."""
+            seen = 0
+            while name in by_name and by_name[name].op in TRANSPARENT and \
+                    seen < 16:
+                ops = self._operand_names(by_name[name])
+                if not ops:
+                    break
+                name = ops[0]
+                seen += 1
+            return name
+
+        def sliced_reads(name: str, depth: int = 0) -> float | None:
+            """If `name` is consumed only via (transparent ->) dynamic-slice,
+            return the total sliced bytes read; else None."""
+            if depth > 16:
+                return None
+            total = 0.0
+            consumers = uses.get(name, [])
+            if not consumers:
+                return 0.0
+            for c in consumers:
+                if c.op == "dynamic-slice":
+                    total += _nbytes(c.result_shapes)
+                elif c.op in TRANSPARENT:
+                    sub = sliced_reads(c.name, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                else:
+                    return None
+            return total
+
+        dus_targets: set[str] = set()
+        dus_update_bytes = 0.0
+        for c in comp:
+            if c.op == "dynamic-update-slice":
+                ops = self._operand_names(c)
+                if ops:
+                    dus_targets.add(resolve_root(ops[0]))
+                if len(ops) > 1:
+                    dus_update_bytes += _nbytes(ctable.get(ops[1], []))
+        total = 0.0
+        for idx, opname in enumerate(operand_names):
+            pname = param_name.get(idx)
+            full = _nbytes(table.get(opname, []))
+            if pname is None:
+                total += full
+                continue
+            if pname in dus_targets:
+                continue                      # aliased in place
+            sliced = sliced_reads(pname)
+            total += full if sliced is None else sliced
+        if dus_update_bytes:
+            total += dus_update_bytes          # the written slice
+        else:
+            total += _nbytes(rshapes)
+        return total
+
+    def _trip_count(self, instr: Instr) -> float:
+        m = _TRIP.search(instr.rest)
+        if m:
+            return float(m.group(1))
+        # fallback: largest integer constant in the condition computation
+        c = _COND.search(instr.rest)
+        if c and c.group(1) in self.computations:
+            consts = [float(x) for i in self.computations[c.group(1)]
+                      if i.op == "constant"
+                      for x in re.findall(r"constant\((\d+)\)", "constant(" + i.rest)]
+            if consts:
+                return max(consts)
+        return 1.0
+
+    # -- main recursion -----------------------------------------------------
+    def computation_costs(self, name: str, *, fused: bool = False) -> Costs:
+        key = f"{name}|{fused}"
+        if key in self._memo:
+            return self._memo[key]
+        costs = Costs()
+        instrs = self.computations.get(name, [])
+        table = self._shape_table(instrs)
+        for ins in instrs:
+            op = ins.op
+            rshapes = ins.result_shapes
+            relems = _nelems(rshapes)
+            if op == "while":
+                trips = self._trip_count(ins)
+                body = _CALLS.search(ins.rest)
+                if body and body.group(1) in self.computations:
+                    costs.scaled_add(
+                        self.computation_costs(body.group(1)), trips)
+                # loop state stays in place (XLA keeps the tuple buffers
+                # alive across iterations); per-iteration IO is already
+                # accounted by the body's dynamic-(update-)slice ops.
+                continue
+            if op == "fusion":
+                calls = _CALLS.search(ins.rest)
+                called = calls.group(1) if calls else None
+                if called in self.computations:
+                    sub = self.computation_costs(called, fused=True)
+                    c = Costs()
+                    c.flops, c.transcendentals = sub.flops, sub.transcendentals
+                    costs.scaled_add(c, 1.0)
+                costs.bytes += self._fusion_bytes(ins, called, table)
+                continue
+            if op in ("call", "custom-call", "conditional", "sort", "map",
+                      "reduce", "reduce-window", "scatter",
+                      "select-and-scatter"):
+                calls = _CALLS.search(ins.rest)
+                if calls and calls.group(1) in self.computations:
+                    sub = self.computation_costs(calls.group(1), fused=True)
+                    mult = 1.0
+                    if op in ("reduce", "map"):
+                        mult = _nelems(self._operand_shapes(ins, table)) / 2
+                    elif op in ("reduce-window", "scatter",
+                                "select-and-scatter", "sort"):
+                        mult = relems
+                    c = Costs()
+                    c.flops, c.transcendentals = sub.flops, sub.transcendentals
+                    costs.scaled_add(c, max(mult, 1.0))
+                if not fused:
+                    costs.bytes += _nbytes(rshapes) + _nbytes(
+                        self._operand_shapes(ins, table))
+                continue
+            if op == "dynamic-update-slice":
+                # in-place: read+write of the updated slice only
+                per_op = self._operands_split(ins, table)
+                upd = per_op[1] if len(per_op) > 1 else []
+                costs.bytes += 2.0 * _nbytes(upd)
+                continue
+            if op in ("dynamic-slice", "slice", "gather", "copy",
+                      "transpose", "reshape", "reverse", "broadcast",
+                      "concatenate", "pad"):
+                costs.bytes += 2.0 * _nbytes(rshapes)
+                continue
+            if op in COLLECTIVES:
+                kind = op.removesuffix("-start")
+                rb = _result_collective_bytes(rshapes, op)
+                g = _group_size(ins.rest)
+                operand, wire = _op_bytes(kind, rb, g)
+                costs.coll_operand_bytes += operand
+                costs.coll_wire_bytes += wire
+                e = costs.coll_by_kind[kind]
+                e[0] += 1
+                e[1] += operand
+                e[2] += wire
+                costs.bytes += _nbytes(rshapes)
+                continue
+            if op == "dot":
+                k = 1.0
+                cd = _CDIMS.search(ins.rest)
+                # lhs is the first operand
+                names = _OPERAND_NAME.findall(ins.rest)
+                lhs = table.get(names[0], []) if names else []
+                if cd and lhs:
+                    dims = [int(x) for x in cd.group(1).split(",") if x]
+                    for d in dims:
+                        if d < len(lhs[0][1]):
+                            k *= lhs[0][1][d]
+                costs.flops += 2.0 * relems * k
+                if not fused:
+                    costs.bytes += _nbytes(rshapes) + _nbytes(
+                        self._operand_shapes(ins, table))
+                continue
+            if op == "convolution":
+                # rough: 2 * result * (operand1 elems / output-feature dim)
+                names = _OPERAND_NAME.findall(ins.rest)
+                ker = table.get(names[1], []) if len(names) > 1 else []
+                kelems = _nelems(ker) if ker else 1.0
+                costs.flops += 2.0 * relems * max(kelems / max(relems, 1), 1)
+                if not fused:
+                    costs.bytes += _nbytes(rshapes) + _nbytes(
+                        self._operand_shapes(ins, table))
+                continue
+            if op in ELEMENTWISE:
+                costs.flops += relems
+            elif op in TRANSCENDENTAL:
+                costs.flops += relems
+                costs.transcendentals += relems
+            elif op == "iota" or op == "rng" or op == "rng-bit-generator":
+                pass
+            if op in FREE:
+                continue
+            if not fused and op not in NO_BYTES:
+                costs.bytes += _nbytes(rshapes) + _nbytes(
+                    self._operand_shapes(ins, table))
+        self._memo[key] = costs
+        return costs
+
+    def entry_costs(self) -> Costs:
+        assert self.entry, "no ENTRY computation found"
+        return self.computation_costs(self.entry)
+
+
+def _result_collective_bytes(rshapes, op: str) -> float:
+    sizes = []
+    for dt, dims in rshapes:
+        n = 1
+        for d in dims:
+            n *= d
+        sizes.append(n * _DTYPE_BYTES.get(dt, 0))
+    if not sizes:
+        return 0.0
+    if op.endswith("-start") and len(sizes) > 1:
+        if op.startswith("all-gather"):
+            return max(sizes)
+        return sum(sizes) / 2.0
+    return float(sum(sizes))
+
+
+def analyze(hlo_text: str) -> dict:
+    """Entry point: loop-aware flops/bytes/collective accounting."""
+    return HloCostModel(hlo_text).entry_costs().as_dict()
+
+
+def while_report(hlo_text: str) -> list[dict]:
+    """Debug view: every while loop with its trip count and weighted cost."""
+    model = HloCostModel(hlo_text)
+    out = []
+    for cname, instrs in model.computations.items():
+        for ins in instrs:
+            if ins.op != "while":
+                continue
+            body = _CALLS.search(ins.rest)
+            bname = body.group(1) if body else "?"
+            trips = model._trip_count(ins)
+            costs = (model.computation_costs(bname)
+                     if bname in model.computations else Costs())
+            out.append({"in": cname, "body": bname, "trips": trips,
+                        "body_flops": costs.flops, "body_bytes": costs.bytes,
+                        "total_flops": costs.flops * trips,
+                        "total_bytes": costs.bytes * trips})
+    return sorted(out, key=lambda d: -d["total_bytes"])

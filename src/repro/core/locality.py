@@ -1,0 +1,208 @@
+"""Locality analysis of compiled steps — the p_local measurement on TPU.
+
+MemPool evaluates its hybrid addressing by the fraction of requests served by
+the local tile (Fig. 5). The GSPMD analogue: of all bytes a step touches, how
+many cross the interconnect as collectives? This module parses HLO text
+(`compiled.as_text()`) and accounts for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, giving the §Roofline
+collective term and the framework's p_local metric.
+
+Note on accounting: optimized HLO prints operands *without* inline types
+(`all-reduce(%fusion.3)`), so operand sizes are derived from the printed
+result type + the collective's algebra:
+
+    all-gather      result = operand * g      -> operand = result / g
+    all-reduce      result = operand          -> operand = result
+    reduce-scatter  result = operand / g      -> operand = result * g
+    all-to-all      result = operand          -> operand = result
+    collective-permute                          operand = result
+
+`operand_bytes` is the task-literal "sum of operand sizes"; `wire_bytes` is
+the ring-algorithm-aware per-chip traffic used for the p_local metric.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# an HLO instruction line:  %name = TYPE opcode(OPERANDS), attrs...
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<rtype>\([^)]*\)|\S+(?:\{[\d,]*\})?)\s+"
+    r"(?P<op>all-gather(?:-start)?|all-reduce(?:-start)?|reduce-scatter"
+    r"|all-to-all|ragged-all-to-all|collective-permute(?:-start)?|collective-broadcast)"
+    r"\(")
+
+_SHAPE_RE = re.compile(r"(?P<dt>(?:pred|[a-z]\d+[a-z0-9]*))\[(?P<dims>[\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dt: str, dims: str) -> float:
+    if dt not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return float(n) * _DTYPE_BYTES[dt]
+
+
+def _result_bytes(rtype: str, op: str) -> float:
+    """Bytes of the collective's *result*, from the printed result type.
+
+    For `-start` ops the result is a tuple carrying (operand(s), result(s));
+    we take the larger half for AG (full side) and half the total for AR/CP
+    (both sides equal).
+    """
+    sizes = [_shape_bytes(m.group("dt"), m.group("dims"))
+             for m in _SHAPE_RE.finditer(rtype)]
+    if not sizes:
+        return 0.0
+    if op.endswith("-start") and len(sizes) > 1:
+        if op.startswith("all-gather"):
+            return max(sizes)           # the gathered full buffer
+        return sum(sizes) / 2.0         # (operand, result) of equal size
+    return float(sum(sizes))
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_LIST_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))   # iota form: [num_groups, group_size]<=[total]
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: int = 0
+    operand_bytes: float = 0.0   # task-literal: sum of operand sizes
+    wire_bytes: float = 0.0      # ring-algorithm per-chip bytes on the wire
+
+
+@dataclasses.dataclass
+class LocalityReport:
+    by_kind: dict[str, CollectiveStats]
+
+    @property
+    def operand_bytes(self) -> float:
+        return sum(s.operand_bytes for s in self.by_kind.values())
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(s.wire_bytes for s in self.by_kind.values())
+
+    @property
+    def count(self) -> int:
+        return sum(s.count for s in self.by_kind.values())
+
+    def p_local(self, total_bytes_accessed: float) -> float:
+        """Fraction of touched bytes served without crossing the interconnect."""
+        if total_bytes_accessed <= 0:
+            return 1.0
+        return max(0.0, 1.0 - self.wire_bytes / total_bytes_accessed)
+
+    def as_dict(self) -> dict:
+        return {k: dataclasses.asdict(v) for k, v in sorted(self.by_kind.items())
+                } | {"total_operand_bytes": self.operand_bytes,
+                     "total_wire_bytes": self.wire_bytes,
+                     "total_count": self.count}
+
+
+def _op_bytes(kind: str, result_bytes: float, g: int) -> tuple[float, float]:
+    """(operand_bytes, wire_bytes_per_chip) from result bytes + group size."""
+    g = max(g, 1)
+    if kind == "all-gather":
+        operand = result_bytes / g
+        wire = operand * (g - 1)
+    elif kind == "all-reduce":
+        operand = result_bytes
+        wire = operand * 2.0 * (g - 1) / g
+    elif kind == "reduce-scatter":
+        operand = result_bytes * g
+        wire = operand * (g - 1) / g / g * g  # = result*(g-1): ring RS moves
+        wire = result_bytes * (g - 1)
+    elif kind in ("all-to-all", "ragged-all-to-all"):
+        operand = result_bytes
+        wire = operand * (g - 1) / g
+    else:  # collective-permute, collective-broadcast
+        operand = result_bytes
+        wire = operand
+    return operand, wire
+
+
+def analyze_hlo(hlo_text: str) -> LocalityReport:
+    by_kind: dict[str, CollectiveStats] = defaultdict(CollectiveStats)
+    for line in hlo_text.splitlines():
+        if ("all-" not in line and "reduce-scatter" not in line
+                and "collective-" not in line):
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        kind = op.removesuffix("-start")
+        rb = _result_bytes(m.group("rtype"), op)
+        g = _group_size(line)
+        operand, wire = _op_bytes(kind, rb, g)
+        st = by_kind[kind]
+        st.count += 1
+        st.operand_bytes += operand
+        st.wire_bytes += wire
+    return LocalityReport(by_kind=dict(by_kind))
+
+
+# ----------------------------------------------------------------------------
+# cost_analysis / memory_analysis helpers
+# ----------------------------------------------------------------------------
+
+def extract_costs(compiled) -> dict[str, float]:
+    """Pull flops / bytes-accessed out of compiled.cost_analysis() robustly."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals"):
+        v = ca.get(k)
+        if v is not None and not (isinstance(v, float) and math.isnan(v)):
+            out[k.replace(" ", "_")] = float(v)
+    return out
+
+
+def extract_memory(compiled) -> dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def peak_device_bytes(mem: dict[str, float]) -> float:
+    """Upper-bound live bytes per device during execution."""
+    return (mem.get("argument_size_in_bytes", 0.0)
+            + mem.get("output_size_in_bytes", 0.0)
+            + mem.get("temp_size_in_bytes", 0.0)
+            - mem.get("alias_size_in_bytes", 0.0))

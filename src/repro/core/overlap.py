@@ -1,0 +1,105 @@
+"""Compute/communication overlap helpers — the Snitch latency-tolerance analogue.
+
+Snitch hides MemPool's 5-cycle L1 latency with 8 outstanding loads plus
+compiler scheduling. The GSPMD analogue is (a) scanning over layers so the
+all-gather of layer k+1's weights overlaps layer k's compute (XLA's latency
+hiding scheduler does the motion once the collectives are exposed), and
+(b) structuring the step so the gradient reduce-scatter of layer k overlaps
+the backward compute of layer k-1.
+
+These helpers keep that structure explicit and testable in the model code.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def with_sharding(x, spec: P):
+    """Annotate intermediate sharding (no-op under a trivial mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def _batch_axes() -> tuple[str, ...] | None:
+    """Batch mesh axes visible in the current mesh context, if any."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return None
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes or None
+    except Exception:
+        return None
+
+
+def shard_batch(x, dim: int = 0):
+    """Constrain dim `dim` of x to the batch axes, leaving others free.
+
+    Scan/while initial carries built with jnp.zeros have no sharding of
+    their own; without this hint GSPMD may choose *replicated* layouts for
+    the entire loop state (including stacked residuals), silently multiplying
+    the memory footprint by the data-axis size. This is the moral opposite
+    of MemPool's sequential region — private data must stay in its tile.
+    """
+    axes = _batch_axes()
+    if axes is None:
+        return x
+    if x.shape[dim] % max(
+            1, _axes_size(axes)):
+        return x
+    U = P.UNCONSTRAINED
+    spec = [U] * x.ndim
+    spec[dim] = axes if len(axes) > 1 else axes[0]
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def _axes_size(axes: tuple[str, ...]) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard_batch_tree(tree, dim: int = 0):
+    return jax.tree.map(lambda x: shard_batch(x, dim) if hasattr(x, "ndim")
+                        and x.ndim > dim else x, tree)
+
+
+def prefetchable_scan(body: Callable, carry, xs, *, unroll: int = 1,
+                      remat_policy: str | None = "dots") -> Any:
+    """`lax.scan` over stacked layer weights with a remat policy.
+
+    The scan keeps the HLO compact (one layer body, trip-counted loop), which
+    is what lets the 512-chip dry-run compile in reasonable time, and exposes
+    the per-iteration weight all-gather for the scheduler to prefetch — the
+    framework's "outstanding load".
+    """
+    policy = _policy(remat_policy)
+    fn = jax.checkpoint(body, policy=policy) if policy is not None else body
+    return jax.lax.scan(fn, carry, xs, unroll=unroll)
+
+
+def _policy(name: str | None):
+    cp = jax.checkpoint_policies
+    if name is None or name == "none":
+        return None
+    if name == "dots":
+        return cp.checkpoint_dots
+    if name == "dots_no_batch":
+        return cp.checkpoint_dots_with_no_batch_dims
+    if name == "nothing":
+        return cp.nothing_saveable
+    if name == "everything":
+        return cp.everything_saveable
+    raise ValueError(f"unknown remat policy {name!r}")

@@ -1,0 +1,2 @@
+from .pipeline import Distributor, Splitter, SyntheticLMStream  # noqa: F401
+from .prefetch import DoubleBufferedFeed  # noqa: F401

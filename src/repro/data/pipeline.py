@@ -1,0 +1,119 @@
+"""Data pipeline — MemPool's distributed DMA (§5.3) mapped to host feeding.
+
+The paper's DMA has a single *frontend* (one logical transfer request), a
+*splitter* (cuts the request at L1-line boundaries, respecting the
+interleaved addressing), and a *distributor* tree fanning sub-requests to
+per-tile *backends*. The host-side analogue:
+
+  frontend    = the training loop requesting "global batch for step k"
+  Splitter    = cuts the global batch at shard boundaries of the mesh's
+                batch axes (pod x data), respecting the RegionPlan
+  Distributor = routes each slice to the host that owns those chips
+  backend     = per-host loader materializing only its slice
+
+The stream is *stateless-resumable*: batch k is a pure function of
+(seed, k), so checkpoint restore never needs loader state, and elastic
+re-sharding (different mesh on restart) just re-splits the same stream —
+the paper's "single DMA with a global view" property.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    global_batch: int
+    seq_len: int
+    vocab: int
+
+
+class SyntheticLMStream:
+    """Deterministic synthetic token stream (zipfian unigram + markov mix).
+
+    Batch k is a pure function of (seed, k): stateless-resumable.
+    """
+
+    def __init__(self, spec: BatchSpec, seed: int = 0):
+        self.spec = spec
+        self.seed = seed
+        # zipf-ish unigram distribution over the vocab
+        ranks = np.arange(1, spec.vocab + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self._p = p / p.sum()
+
+    def batch(self, step: int, lo: int = 0, hi: int | None = None) -> dict:
+        """Rows [lo, hi) of global batch `step` (the splitter's slice)."""
+        hi = self.spec.global_batch if hi is None else hi
+        out_tokens = np.empty((hi - lo, self.spec.seq_len + 1), np.int32)
+        for row in range(lo, hi):
+            rng = np.random.default_rng(
+                (self.seed * 1_000_003 + step) * 131_071 + row)
+            out_tokens[row - lo] = rng.choice(
+                self.spec.vocab, size=self.spec.seq_len + 1, p=self._p)
+        return {"tokens": out_tokens[:, :-1], "labels": out_tokens[:, 1:]}
+
+
+class Splitter:
+    """Cut a global batch request at shard boundaries (paper's splitter)."""
+
+    def __init__(self, mesh: jax.sharding.Mesh, batch_axes: tuple[str, ...]):
+        self.mesh = mesh
+        self.batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+        self.n_shards = math.prod(self.mesh.shape[a] for a in self.batch_axes) \
+            if self.batch_axes else 1
+
+    def slices(self, global_batch: int) -> list[tuple[int, int]]:
+        n = self.n_shards
+        if global_batch % n:
+            n = math.gcd(global_batch, n)
+        per = global_batch // n
+        return [(i * per, (i + 1) * per) for i in range(n)]
+
+
+class Distributor:
+    """Route shard slices to their owning hosts (paper's distributor tree).
+
+    In a real multi-host deployment each process materializes only the
+    slices owned by its addressable devices; in this single-process
+    environment that reduces to materializing everything, but the routing
+    logic (slice -> device -> process index) is identical.
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh, splitter: Splitter):
+        self.mesh = mesh
+        self.splitter = splitter
+
+    def local_slices(self, global_batch: int) -> list[tuple[int, int]]:
+        slices = self.splitter.slices(global_batch)
+        # device d owns slice i = its linear index along the batch axes
+        local = []
+        n = len(slices)
+        for i, sl in enumerate(slices):
+            # process ownership: all devices are addressable here
+            local.append(sl)
+        return local
+
+    def materialize(self, stream: SyntheticLMStream, step: int,
+                    sharding: jax.sharding.NamedSharding) -> dict:
+        """Build the global batch as sharded jax.Arrays from per-slice parts."""
+        spec = stream.spec
+        parts = [stream.batch(step, lo, hi)
+                 for lo, hi in self.local_slices(spec.global_batch)]
+        full = {k: np.concatenate([p[k] for p in parts], axis=0)
+                for k in parts[0]}
+        return {k: jax.device_put(v, sharding) for k, v in full.items()}
+
+
+def stream_batches(stream: SyntheticLMStream, distributor: Distributor,
+                   sharding, start_step: int = 0) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield distributor.materialize(stream, step, sharding)
+        step += 1

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels: the paper's Table-1 suite + LM hot-spot kernels.
+
+Each <name>.py holds the pl.pallas_call + BlockSpec implementation;
+ops.py the jit'd public wrappers (interpret=True off-TPU); ref.py the
+pure-jnp oracles the tests assert against.
+"""
+
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,76 @@
+"""3x3 2-D convolution — the paper's `2dconv` kernel.
+
+MemPool tiles the image so each core's pixels live in its own tile (local
+accesses except at tile edges). TPU translation: the grid walks row-blocks;
+halo rows arrive as two extra views of the same input whose index_maps point
+at the neighbor blocks (clamped at the image edges), so each VMEM tile has
+its "remote" halo delivered by the pipeline rather than re-fetched — the
+neighbor-tile access of the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_ref, up_ref, dn_ref, w_ref, o_ref, *, n_blocks: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)          # (bh, W)
+    bh, W = x.shape
+    w = w_ref[...].astype(jnp.float32)          # (3, 3) in SMEM-like block
+
+    # rows shifted by -1 (need row above) and +1 (row below), with halo
+    # rows taken from the neighbor blocks; zero at the true image edges.
+    up_halo = up_ref[...].astype(jnp.float32)[-1:]   # last row of block i-1
+    dn_halo = dn_ref[...].astype(jnp.float32)[:1]    # first row of block i+1
+    up_halo = jnp.where(i == 0, jnp.zeros_like(up_halo), up_halo)
+    dn_halo = jnp.where(i == n_blocks - 1, jnp.zeros_like(dn_halo), dn_halo)
+    x_up = jnp.concatenate([up_halo, x[:-1]], axis=0)    # row r-1
+    x_dn = jnp.concatenate([x[1:], dn_halo], axis=0)     # row r+1
+
+    def shift_cols(a, dx):
+        if dx == 0:
+            return a
+        pad = jnp.zeros((a.shape[0], abs(dx)), a.dtype)
+        if dx > 0:    # neighbor to the left
+            return jnp.concatenate([pad, a[:, :-dx]], axis=1)
+        return jnp.concatenate([a[:, -dx:], pad], axis=1)
+
+    acc = jnp.zeros_like(x)
+    for dy, row in ((0, x_up), (1, x), (2, x_dn)):
+        for dx in range(3):
+            acc = acc + w[dy, dx] * shift_cols(row, 1 - dx)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def conv2d_3x3(x: jax.Array, w: jax.Array, *, block_rows: int = 256,
+               interpret: bool = False) -> jax.Array:
+    """x: (H, W); w: (3, 3); zero-padded same correlation."""
+    H, W = x.shape
+    bh = min(block_rows, H)
+    assert H % bh == 0
+    n_blocks = H // bh
+    kernel = functools.partial(_conv_kernel, n_blocks=n_blocks)
+    clamp = lambda i, lo, hi: jnp.clip(i, lo, hi)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((bh, W), lambda i: (i, 0)),
+            pl.BlockSpec((bh, W),
+                         lambda i: (clamp(i - 1, 0, n_blocks - 1), 0)),
+            pl.BlockSpec((bh, W),
+                         lambda i: (clamp(i + 1, 0, n_blocks - 1), 0)),
+            pl.BlockSpec((3, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x, x, x, w)

@@ -1,0 +1,46 @@
+"""8x8 2-D DCT — the paper's `dct` kernel (JPEG-style block transform).
+
+MemPool cores each own local 8x8 blocks and use the stack for intermediates.
+TPU translation: a batch of blocks per grid step, the (8, 8) basis matrix
+resident in VMEM, two small matmuls per block batched on the MXU:
+Y = C X C^T.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dct_kernel(x_ref, c_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (bn, 8, 8)
+    c = c_ref[...].astype(jnp.float32)          # (8, 8)
+    t = jax.lax.dot_general(x, c, (((2,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # X C^T
+    y = jnp.einsum("ij,njk->nik", c, t)                          # C (X C^T)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def dct8x8(blocks: jax.Array, *, block_n: int = 512,
+           interpret: bool = False) -> jax.Array:
+    """blocks: (N, 8, 8) -> per-block 2-D DCT."""
+    from . import ref
+    n = blocks.shape[0]
+    bn = min(block_n, n)
+    assert n % bn == 0
+    c = jnp.asarray(ref.dct_matrix(8))
+    return pl.pallas_call(
+        _dct_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, 8, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 8, 8), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(blocks.shape, blocks.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(blocks, c)

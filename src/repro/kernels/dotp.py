@@ -1,0 +1,47 @@
+"""dotp — vector dot product with cross-grid accumulation.
+
+The paper's second memory-bound kernel. The reduction accumulates into a
+(1, 1) output block revisited by every grid step ("arbitrary" semantics =
+sequential on TPU), mirroring MemPool's per-core partial sums + final
+reduction tree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dotp_kernel(x_ref, y_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...].astype(jnp.float32)
+                          * y_ref[...].astype(jnp.float32))[None, None]
+
+
+def dotp(x: jax.Array, y: jax.Array, *, block_rows: int = 512,
+         interpret: bool = False) -> jax.Array:
+    """x, y: (M, N); returns scalar f32 sum(x*y)."""
+    m, n = x.shape
+    br = min(block_rows, m)
+    assert m % br == 0
+    out = pl.pallas_call(
+        _dotp_kernel,
+        grid=(m // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x, y)
+    return out[0, 0]

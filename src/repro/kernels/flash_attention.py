@@ -1,0 +1,116 @@
+"""Causal flash attention — the LM hot-spot kernel.
+
+The baseline jnp chunked attention (models/attention.py) crosses HBM ~3x per
+score block; this kernel keeps the (bq, bk) block, the online-softmax state
+(m, l) and the output accumulator resident in VMEM across the whole kv loop,
+so HBM traffic collapses to one read of q/k/v and one write of o — the
+"sequential region" of the attention computation in MemPool terms.
+
+Grid: (B, H, nq, nk) with the kv dim "arbitrary" (sequential) so the VMEM
+scratch carries across kv steps. GQA is expressed in the k/v index_maps
+(h -> h // group), no repeated KV in memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, n_k: int, bq: int, bk: int, causal: bool):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                # (bq, hd)
+    k = k_ref[0, 0]                                # (bk, hd)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == n_k - 1)
+    def _store():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512, interpret: bool = False):
+    """q: (B, H, S, hd); k/v: (B, KV, S, hd) with H % KV == 0."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    n_q, n_k = s // bq, s // bk
+    kernel = functools.partial(_fa_kernel, scale=hd ** -0.5, n_k=n_k,
+                               bq=bq, bk=bk, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def hbm_traffic_bytes(b, h, kv, s, hd, dtype_bytes: int = 2) -> dict:
+    """Structural HBM traffic of this kernel vs the jnp chunked baseline.
+
+    Used by §Perf: the kernel's traffic is q+k+v read once, o written once;
+    the baseline crosses HBM ~3x per (bq, bk) score block (write scores,
+    read for exp/sum, write p, read for pv) plus q/k/v reads per block pair.
+    """
+    qkv = (b * h * s * hd + 2 * b * kv * s * hd) * dtype_bytes
+    out = b * h * s * hd * dtype_bytes
+    kernel = qkv + out
+    n_blocks = (s // 512) ** 2
+    score_block = b * h * 512 * 512 * 4
+    baseline = kernel + 3 * n_blocks * score_block
+    return {"kernel_bytes": float(kernel), "baseline_bytes": float(baseline),
+            "reduction": baseline / kernel}

@@ -1,0 +1,61 @@
+"""Public jit'd wrappers for the kernel suite.
+
+Dispatch: real `pl.pallas_call` lowering on TPU; `interpret=True` (kernel
+body executed op-by-op on CPU) everywhere else — numerics identical, which
+is what the allclose tests against ref.py verify.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import axpy as _axpy
+from . import conv2d as _conv2d
+from . import dct8x8 as _dct8x8
+from . import dotp as _dotp
+from . import flash_attention as _fa
+from . import matmul as _matmul
+from . import rmsnorm as _rmsnorm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 256):
+    return _matmul.matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+
+
+@jax.jit
+def axpy(alpha, x, y):
+    return _axpy.axpy(alpha, x, y, interpret=_interpret())
+
+
+@jax.jit
+def dotp(x, y):
+    return _dotp.dotp(x, y, interpret=_interpret())
+
+
+@jax.jit
+def conv2d_3x3(x, w):
+    return _conv2d.conv2d_3x3(x, w, interpret=_interpret())
+
+
+@jax.jit
+def dct8x8(blocks):
+    return _dct8x8.dct8x8(blocks, interpret=_interpret())
+
+
+@jax.jit
+def rmsnorm(x, scale):
+    return _rmsnorm.rmsnorm(x, scale, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512):
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=_interpret())

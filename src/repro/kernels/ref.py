@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def axpy(alpha, x, y):
+    return (alpha * x.astype(jnp.float32) + y.astype(jnp.float32)).astype(x.dtype)
+
+
+def dotp(x, y):
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+
+def conv2d_3x3(x, w):
+    """x: (H, W); w: (3, 3). Zero-padded 'same' convolution (correlation)."""
+    xf = x.astype(jnp.float32)
+    out = jnp.zeros_like(xf)
+    H, W = x.shape
+    xp = jnp.pad(xf, 1)
+    for dy in range(3):
+        for dx in range(3):
+            out = out + w[dy, dx].astype(jnp.float32) * \
+                jax.lax.dynamic_slice(xp, (dy, dx), (H, W))
+    return out.astype(x.dtype)
+
+
+def dct_matrix(n: int = 8) -> np.ndarray:
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    c = np.sqrt(2.0 / n) * np.cos((2 * i + 1) * k * np.pi / (2 * n))
+    c[0] /= np.sqrt(2.0)
+    return c.astype(np.float32)
+
+
+def dct8x8(blocks):
+    """blocks: (N, 8, 8) -> 2-D DCT per block: C X C^T."""
+    C = jnp.asarray(dct_matrix(8))
+    xf = blocks.astype(jnp.float32)
+    return jnp.einsum("ij,njk,lk->nil", C, xf, C).astype(blocks.dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    """q,k,v: (B, H, S, hd) (kernel layout; GQA resolved by the wrapper)."""
+    b, h, s, hd = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

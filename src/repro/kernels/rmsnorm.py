@@ -1,0 +1,37 @@
+"""Fused RMSNorm — one HBM round-trip instead of three (norm hot path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * (1.0 + s_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+            block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (M, D); scale: (D,)."""
+    import functools
+    m, d = x.shape
+    br = min(block_rows, m)
+    assert m % br == 0
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(m // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, scale)

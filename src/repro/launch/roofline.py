@@ -1,0 +1,112 @@
+"""Roofline tables from the dry-run JSONs -> markdown for EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--update-experiments]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def load(mesh: str = "single", variants: bool = False) -> list[dict]:
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("mesh") != mesh:
+            continue
+        if bool(d.get("variant")) != variants:
+            continue
+        rows.append(d)
+    return rows
+
+
+def _fmt(x: float, digits: int = 2) -> str:
+    if x == 0:
+        return "0"
+    if x >= 100:
+        return f"{x:.0f}"
+    return f"{x:.{digits}f}"
+
+
+def baseline_table(mesh: str = "single") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| HLO GFLOPs/chip | GB/chip traffic | peak GB/chip | "
+           "MODEL/HLO flops | note |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for d in load(mesh):
+        if d["status"] == "skipped":
+            lines.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | — "
+                         f"| — | — | — | skipped: {d['reason'][:60]} |")
+            continue
+        r = d["roofline"]
+        h = d["hlo"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {_fmt(r['compute_s'])} "
+            f"| {_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} "
+            f"| **{r['dominant'].replace('_s', '')}** "
+            f"| {h['flops_per_device'] / 1e9:.0f} "
+            f"| {h['bytes_per_device'] / 1e9:.0f} "
+            f"| {d['peak_device_bytes'] / 2**30:.1f} "
+            f"| {r['useful_flops_ratio']:.3f} | |")
+    return "\n".join(lines)
+
+
+def variant_table() -> str:
+    hdr = ("| arch | shape | variant | compute s | memory s | collective s "
+           "| MODEL/HLO flops | peak GB |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for d in load("single", variants=True):
+        if d["status"] != "ok":
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['variant']} "
+            f"| {_fmt(r['compute_s'])} | {_fmt(r['memory_s'])} "
+            f"| {_fmt(r['collective_s'])} | {r['useful_flops_ratio']:.3f} "
+            f"| {d['peak_device_bytes'] / 2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def multi_pod_table() -> str:
+    single = {(d["arch"], d["shape"]): d for d in load("single")}
+    hdr = ("| arch | shape | 256-chip dominant s | 512-chip dominant s "
+           "| scaling | collectives 512 (GB/chip) |")
+    sep = "|" + "---|" * 6
+    lines = [hdr, sep]
+    for d in load("multi"):
+        if d["status"] != "ok":
+            continue
+        s = single.get((d["arch"], d["shape"]))
+        if not s or s["status"] != "ok":
+            continue
+        rm, rs = d["roofline"], s["roofline"]
+        dm = max(rm["compute_s"], rm["memory_s"], rm["collective_s"])
+        ds = max(rs["compute_s"], rs["memory_s"], rs["collective_s"])
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {_fmt(ds)} | {_fmt(dm)} "
+            f"| {ds / max(dm, 1e-12):.2f}x "
+            f"| {d['hlo']['collective_operand_bytes_per_device'] / 1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variants", action="store_true")
+    args = ap.parse_args()
+    if args.variants:
+        print(variant_table())
+    else:
+        print(baseline_table(args.mesh))
+        print()
+        print(multi_pod_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""Parameter specs and core layers shared by the model zoo.
+
+Every parameter is declared as a ParamSpec carrying its *logical axes* —
+the handles the hybrid-addressing planner (core/addressing.py) uses to place
+it in the SEQUENTIAL or INTERLEAVED region. One spec tree serves both the
+dry-run (abstract ShapeDtypeStructs) and real initialization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Logical = tuple  # tuple[str | None, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: Logical
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"      # normal | zeros | ones | embed
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / np.sqrt(fan_in)
+        if self.init == "embed":
+            scale = 1.0
+        x = jax.random.normal(key, self.shape, jnp.float32) * scale
+        return x.astype(self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_tree(specs):
+    return jax.tree.map(lambda s: s.abstract(), specs, is_leaf=is_spec)
+
+
+def logical_tree(specs):
+    return jax.tree.map(lambda s: s.logical, specs, is_leaf=is_spec)
+
+
+def init_tree(specs, key):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [s.materialize(k) for s, k in zip(leaves, keys)])
+
+
+# ----------------------------------------------------------------------------
+# Normalization / activations
+# ----------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def geglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jnp.einsum("...d,df->...f", x, w_in) + b_in
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)          # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, hd/2)
+    angles = angles[..., None, :]                                # broadcast heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Shared spec builders
+# ----------------------------------------------------------------------------
+
+def attn_specs(d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+               *, qkv_bias: bool = False, qk_norm: bool = False,
+               dtype=jnp.bfloat16) -> dict:
+    s = {
+        "wq": ParamSpec((d_model, n_heads, head_dim), ("embed", "heads", None), dtype),
+        "wk": ParamSpec((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", None), dtype),
+        "wv": ParamSpec((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", None), dtype),
+        "wo": ParamSpec((n_heads, head_dim, d_model), ("heads", None, "embed"), dtype),
+    }
+    if qkv_bias:
+        s |= {
+            "bq": ParamSpec((n_heads, head_dim), ("heads", None), dtype, init="zeros"),
+            "bk": ParamSpec((n_kv_heads, head_dim), ("kv_heads", None), dtype, init="zeros"),
+            "bv": ParamSpec((n_kv_heads, head_dim), ("kv_heads", None), dtype, init="zeros"),
+        }
+    if qk_norm:
+        s |= {
+            "q_norm": ParamSpec((head_dim,), ("norm",), dtype, init="zeros"),
+            "k_norm": ParamSpec((head_dim,), ("norm",), dtype, init="zeros"),
+        }
+    return s
+
+
+def ffn_specs(d_model: int, d_ff: int, *, kind: str = "swiglu",
+              dtype=jnp.bfloat16) -> dict:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d_model, d_ff), ("embed", "ffn"), dtype),
+            "w_up": ParamSpec((d_model, d_ff), ("embed", "ffn"), dtype),
+            "w_down": ParamSpec((d_ff, d_model), ("ffn", "embed"), dtype),
+        }
+    if kind == "gelu":  # whisper-style MLP with biases
+        return {
+            "w_in": ParamSpec((d_model, d_ff), ("embed", "ffn"), dtype),
+            "b_in": ParamSpec((d_ff,), ("ffn",), dtype, init="zeros"),
+            "w_out": ParamSpec((d_ff, d_model), ("ffn", "embed"), dtype),
+            "b_out": ParamSpec((d_model,), ("embed",), dtype, init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+def apply_ffn(params: dict, x, *, kind: str = "swiglu"):
+    if kind == "swiglu":
+        return swiglu(x, params["w_gate"], params["w_up"], params["w_down"])
+    if kind == "geglu":
+        return geglu(x, params["w_gate"], params["w_up"], params["w_down"])
+    if kind == "gelu":
+        return gelu_mlp(x, params["w_in"], params["b_in"], params["w_out"],
+                        params["b_out"])
+    raise ValueError(kind)
+
+
+def qkv_project(params: dict, x, positions, *, n_heads, n_kv_heads, head_dim,
+                qkv_bias=False, qk_norm=False, rope=True, theta=1e4):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,KV,hd) with rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def out_project(params: dict, attn_out):
+    """attn_out: (B, S, H, hd) -> (B, S, d)."""
+    return jnp.einsum("bshk,hkd->bsd", attn_out, params["wo"])

@@ -1,0 +1,360 @@
+"""Step factories: compose blocks into train / prefill / decode programs.
+
+Layers are organized as *super-blocks* (one period of cfg.pattern) and
+scanned with `lax.scan` + remat, so the lowered HLO stays compact enough to
+compile for 512 chips and the per-iteration weight all-gather is exposed for
+latency hiding (the Snitch outstanding-load analogue — see core/overlap.py).
+
+Layer layout: n_super complete periods (scanned, weights stacked on a
+leading "layers" axis) followed by `n_layers % period` remainder layers
+(unscanned). The cross-entropy is computed in sequence chunks with remat so
+(B, S, vocab) logits never materialize.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import overlap
+from repro.models.blocks import BLOCKS
+from repro.models.layers import (ParamSpec, abstract_tree, init_tree,
+                                 logical_tree, layer_norm, rms_norm)
+from repro.optim import AdamConfig, adam_init, adam_update, warmup_cosine
+
+F32 = jnp.float32
+
+AUX_COEF = 1e-2     # MoE load-balance loss weight
+Z_COEF = 1e-4       # z-loss weight
+LOSS_CHUNK = 512    # sequence chunk for the fused CE
+
+
+# ----------------------------------------------------------------------------
+# Layer plan
+# ----------------------------------------------------------------------------
+
+def block_plan(cfg) -> tuple[tuple[str, ...], int, tuple[str, ...]]:
+    if cfg.family == "vlm" and cfg.cross_every:
+        pattern = ("attn",) * (cfg.cross_every - 1) + ("cross",)
+    else:
+        pattern = cfg.pattern
+    period = len(pattern)
+    return pattern, cfg.n_layers // period, pattern[: cfg.n_layers % period]
+
+
+def _stack(specs, n: int):
+    def one(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n, *s.shape), ("layers", *s.logical), s.dtype,
+                         s.init, s.scale)
+    return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ----------------------------------------------------------------------------
+# Parameter specs
+# ----------------------------------------------------------------------------
+
+def param_specs(cfg, max_seq: int = 4096) -> dict:
+    pattern, n_super, remainder = block_plan(cfg)
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "tok_embed": ParamSpec((cfg.vocab, d), ("vocab", None), init="embed",
+                               scale=1.0),
+        "unembed": ParamSpec((d, cfg.vocab), ("embed", "vocab")),
+    }
+    if cfg.norm == "rms":
+        specs["ln_f"] = ParamSpec((d,), ("norm",), init="zeros")
+    else:
+        specs["ln_f_s"] = ParamSpec((d,), ("norm",), init="ones")
+        specs["ln_f_b"] = ParamSpec((d,), ("norm",), init="zeros")
+    specs["blocks"] = {
+        f"sub{i}": _stack(BLOCKS[k]["specs"](cfg), n_super)
+        for i, k in enumerate(pattern)}
+    if remainder:
+        specs["rem"] = {f"rem{i}": BLOCKS[k]["specs"](cfg)
+                        for i, k in enumerate(remainder)}
+    if cfg.family == "encdec":
+        specs["enc"] = {
+            "blocks": _stack(BLOCKS["enc_attn"]["specs"](cfg), cfg.n_enc_layers),
+            "pos": ParamSpec((cfg.enc_seq, d), (None, None), init="embed",
+                             scale=0.02),
+            "ln_s": ParamSpec((d,), ("norm",), init="ones"),
+            "ln_b": ParamSpec((d,), ("norm",), init="zeros"),
+        }
+        specs["dec_pos"] = ParamSpec((max_seq, d), (None, None), init="embed",
+                                     scale=0.02)
+    return specs
+
+
+def abstract_params(cfg, max_seq: int = 4096):
+    specs = param_specs(cfg, max_seq)
+    return abstract_tree(specs), logical_tree(specs)
+
+
+def init_params(cfg, key, max_seq: int = 4096):
+    return init_tree(param_specs(cfg, max_seq), key)
+
+
+# ----------------------------------------------------------------------------
+# Decode cache specs
+# ----------------------------------------------------------------------------
+
+def cache_specs(cfg, B: int, cache_len: int) -> dict:
+    pattern, n_super, remainder = block_plan(cfg)
+    specs: dict[str, Any] = {"blocks": {
+        f"sub{i}": _stack(BLOCKS[k]["cache"](cfg, B, cache_len), n_super)
+        for i, k in enumerate(pattern)}}
+    if remainder:
+        specs["rem"] = {f"rem{i}": BLOCKS[k]["cache"](cfg, B, cache_len)
+                        for i, k in enumerate(remainder)}
+    return specs
+
+
+def abstract_cache(cfg, B: int, cache_len: int):
+    specs = cache_specs(cfg, B, cache_len)
+    return abstract_tree(specs), logical_tree(specs)
+
+
+def init_cache(cfg, B: int, cache_len: int):
+    return init_tree(cache_specs(cfg, B, cache_len), jax.random.PRNGKey(0))
+
+
+# ----------------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------------
+
+def _final_norm(cfg, params, x):
+    if cfg.norm == "rms":
+        return rms_norm(x, params["ln_f"])
+    return layer_norm(x, params["ln_f_s"], params["ln_f_b"])
+
+
+def _encode(cfg, params, enc_embeds):
+    """Whisper encoder over stub frame embeddings."""
+    x = enc_embeds + params["enc"]["pos"].astype(enc_embeds.dtype)
+    B, S = x.shape[:2]
+    ctx = {"positions": jnp.broadcast_to(jnp.arange(S), (B, S)), "rope": False}
+
+    def body(carry, layer_params):
+        x, = carry
+        x, _ = BLOCKS["enc_attn"]["apply"](cfg, layer_params, x, ctx)
+        return (x,), None
+
+    (x,), _ = overlap.prefetchable_scan(body, (x,), params["enc"]["blocks"],
+                                        remat_policy=cfg.remat)
+    return layer_norm(x, params["enc"]["ln_s"], params["enc"]["ln_b"])
+
+
+def forward(cfg, params, tokens, *, cross_embeds=None, layer_wsc=None):
+    """Token ids -> final hidden states (B, S, d) and aux loss.
+
+    `layer_wsc`: optional PartitionSpec tree matching one super-block's
+    params. When given, the scan body re-constrains the sliced layer weights
+    to those specs — used to force true FSDP semantics (all-gather the
+    layer's weights over `data` once per layer) where GSPMD would otherwise
+    choose partial-sum all-reduces of activation-sized buffers per einsum
+    (see EXPERIMENTS.md §Perf H2).
+    """
+    pattern, n_super, remainder = block_plan(cfg)
+    B, S = tokens.shape
+    x = jnp.take(params["tok_embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.family == "encdec":
+        cross_embeds = _encode(cfg, params, cross_embeds)
+        x = x + params["dec_pos"][:S].astype(x.dtype)
+    ctx = {"positions": positions, "rope": cfg.family != "encdec",
+           "cross_embeds": cross_embeds, "max_seq": S}
+
+    def super_body(carry, super_params):
+        x, aux = carry
+        if layer_wsc is not None:
+            super_params = jax.tree.map(overlap.with_sharding, super_params,
+                                        layer_wsc)
+        for i, kind in enumerate(pattern):
+            x, a = BLOCKS[kind]["apply"](cfg, super_params[f"sub{i}"], x, ctx)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = overlap.prefetchable_scan(
+        super_body, (x, jnp.zeros((), F32)), params["blocks"],
+        remat_policy=cfg.remat)
+    for i, kind in enumerate(remainder):
+        x, a = BLOCKS[kind]["apply"](cfg, params["rem"][f"rem{i}"], x, ctx)
+        aux = aux + a
+    return _final_norm(cfg, params, x), aux
+
+
+# ----------------------------------------------------------------------------
+# Loss (chunked over sequence; logits never materialize at (B, S, V))
+# ----------------------------------------------------------------------------
+
+def _chunked_ce(cfg, unembed, hidden, labels):
+    B, S, d = hidden.shape
+    c = min(LOSS_CHUNK, S)
+    if S % c:
+        c = S
+    nc = S // c
+    split = lambda a: jnp.moveaxis(a.reshape(B, nc, c, *a.shape[2:]), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, blk):
+        h, y = blk
+        logits = jnp.einsum("bcd,dv->bcv", h, unembed,
+                            preferred_element_type=F32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(y, cfg.vocab, dtype=F32)
+        ll = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - ll).sum()
+        z = Z_COEF * jnp.square(lse).sum()
+        return carry + nll + z, None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), F32),
+                            (split(hidden), split(labels)))
+    return total / (B * S)
+
+
+def loss_fn(cfg, params, batch, layer_wsc=None):
+    cross = batch.get("enc_embeds", batch.get("img_embeds"))
+    hidden, aux = forward(cfg, params, batch["tokens"], cross_embeds=cross,
+                          layer_wsc=layer_wsc)
+    ce = _chunked_ce(cfg, params["unembed"], hidden, batch["labels"])
+    return ce + AUX_COEF * aux, {"ce": ce, "aux": aux}
+
+
+# ----------------------------------------------------------------------------
+# Train step
+# ----------------------------------------------------------------------------
+
+def make_train_step(cfg, *, adam: AdamConfig | None = None,
+                    schedule_kwargs: dict | None = None, layer_wsc=None):
+    adam = adam or AdamConfig(moment_dtype=cfg.moment_dtype)
+    sched = functools.partial(warmup_cosine, **(schedule_kwargs or {}))
+    acc_dtype = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else F32
+
+    def train_step(state, batch):
+        params = state["params"]
+        k = cfg.grad_accum
+        grad_fn = jax.value_and_grad(
+            lambda p, mb: loss_fn(cfg, p, mb, layer_wsc), has_aux=True)
+        if k <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape(k, a.shape[0] // k, *a.shape[1:]), batch)
+
+            def step_i(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = grad_fn(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), gacc, g)
+                return (gacc, lacc + l), None
+
+            # p * 0 (not jnp.zeros) so the accumulator inherits each param's
+            # sharding — a fresh zeros carry would let GSPMD pick replicated
+            # layouts for the whole accumulation loop state.
+            gacc0 = jax.tree.map(
+                lambda p: (p * 0).astype(acc_dtype), params)
+            (gacc, lsum), _ = jax.lax.scan(
+                step_i, (gacc0, jnp.zeros((), F32)), micro)
+            grads = jax.tree.map(lambda g: g / k, gacc)
+            loss = lsum / k
+            parts = {}
+        lr_scale = sched(state["opt"]["step"] + 1)
+        new_params, new_opt, om = adam_update(params, grads, state["opt"],
+                                              adam, lr_scale)
+        metrics = {"loss": loss, "lr_scale": lr_scale, **om}
+        if parts:
+            metrics |= parts
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def abstract_train_state(cfg, max_seq: int = 4096):
+    """(state_sds, state_logical) for dry-run lowering and planning."""
+    p_sds, p_log = abstract_params(cfg, max_seq)
+    mdt = jnp.dtype(cfg.moment_dtype)
+    m_sds = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p_sds)
+    state_sds = {"params": p_sds,
+                 "opt": {"m": m_sds, "v": m_sds,
+                         "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+    state_log = {"params": p_log,
+                 "opt": {"m": p_log, "v": p_log, "step": ()}}
+    return state_sds, state_log
+
+
+def init_train_state(cfg, key, max_seq: int = 4096,
+                     adam: AdamConfig | None = None):
+    adam = adam or AdamConfig(moment_dtype=cfg.moment_dtype)
+    params = init_params(cfg, key, max_seq)
+    return {"params": params, "opt": adam_init(params, adam)}
+
+
+# ----------------------------------------------------------------------------
+# Prefill / decode steps
+# ----------------------------------------------------------------------------
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        cross = batch.get("enc_embeds", batch.get("img_embeds"))
+        hidden, _ = forward(cfg, params, batch["tokens"], cross_embeds=cross)
+        last = hidden[:, -1]
+        logits = jnp.einsum("bd,dv->bv", last, params["unembed"],
+                            preferred_element_type=F32)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, max_seq: int = 1 << 30):
+    """`max_seq` is the workload's logical context length; caches shorter
+    than it (windowed archs) operate as rolling buffers."""
+    pattern, n_super, remainder = block_plan(cfg)
+
+    def decode_step(params, cache, batch):
+        tokens, pos = batch["tokens"], batch["pos"]
+        B = tokens.shape[0]
+        x = jnp.take(params["tok_embed"], tokens, axis=0)       # (B,1,d)
+        if cfg.family == "encdec":
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["dec_pos"], pos, 1, axis=0).astype(x.dtype)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        ctx = {"positions": positions, "rope": cfg.family != "encdec",
+               "max_seq": max_seq}
+
+        def super_body(x, scanned):
+            layer_params, layer_cache = scanned
+            new_cache = {}
+            for i, kind in enumerate(pattern):
+                x, c = BLOCKS[kind]["decode"](cfg, layer_params[f"sub{i}"], x,
+                                              layer_cache[f"sub{i}"], pos, ctx)
+                new_cache[f"sub{i}"] = c
+            return x, new_cache
+
+        x, new_blocks = jax.lax.scan(super_body, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache: dict[str, Any] = {"blocks": new_blocks}
+        if remainder:
+            new_cache["rem"] = {}
+            for i, kind in enumerate(remainder):
+                x, c = BLOCKS[kind]["decode"](
+                    cfg, params["rem"][f"rem{i}"], x,
+                    cache["rem"][f"rem{i}"], pos, ctx)
+                new_cache["rem"][f"rem{i}"] = c
+        x = _final_norm(cfg, params, x)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"],
+                            preferred_element_type=F32)[:, 0]
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return new_cache, token
+
+    return decode_step
+
+
+def decode_cache_len(cfg, seq_len: int) -> int:
+    """Physical cache length: windowed archs keep a rolling window buffer."""
+    if cfg.window and cfg.window < seq_len:
+        return cfg.window
+    return seq_len

@@ -1,0 +1,2 @@
+from .adamw import adam_init, adam_update, AdamConfig  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,3 @@
+from .train_loop import TrainLoop, TrainLoopConfig  # noqa: F401
+from .serve_loop import ServeLoop  # noqa: F401
+from .compile_cache import CompileCache  # noqa: F401

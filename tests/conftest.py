@@ -1,0 +1,12 @@
+import os
+import sys
+from pathlib import Path
+
+# make `repro` importable without installation (PYTHONPATH=src also works)
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; only launch/dryrun.py forces 512 (and the
+# dry-run CI test spawns a subprocess with REPRO_DRYRUN_DEVICES=8).

@@ -1,0 +1,26 @@
+"""High-level API (the OpenMP layer): plan / train / serve one-calls."""
+
+import jax
+import numpy as np
+
+from repro import api
+
+
+def test_plan_regions():
+    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    p = api.plan("qwen3-14b", mesh)
+    ffn = next(v for k, v in p.items() if k.endswith("w_gate"))
+    assert ffn["region"] == "INTERLEAVED"
+    norm = next(v for k, v in p.items() if "ln_f" in k)
+    assert norm["region"] == "REPLICATED"
+    assert len(p) > 10
+
+
+def test_train_and_serve_one_call(tmp_path):
+    report = api.train("xlstm-125m", steps_=4, batch=2, seq=16,
+                       checkpoint_dir=str(tmp_path))
+    assert report["final_step"] == 4
+    out = api.serve("xlstm-125m", report["params"], batch=2, max_seq=16,
+                    max_new=4)
+    assert out["tokens"].shape == (2, 5)
+    assert out["stats"]["decode_steps"] == 4

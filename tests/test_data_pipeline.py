@@ -1,0 +1,79 @@
+"""Data pipeline: splitter/distributor semantics + double-buffered feed."""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data import DoubleBufferedFeed, Distributor, Splitter, SyntheticLMStream
+from repro.data.pipeline import BatchSpec
+
+
+def test_stream_deterministic_and_stateless():
+    spec = BatchSpec(global_batch=4, seq_len=16, vocab=1000)
+    s1 = SyntheticLMStream(spec, seed=7)
+    s2 = SyntheticLMStream(spec, seed=7)
+    b1 = s1.batch(42)
+    b2 = s2.batch(42)                      # fresh object, same (seed, step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = s1.batch(43)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    spec = BatchSpec(global_batch=2, seq_len=8, vocab=100)
+    b = SyntheticLMStream(spec).batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_splitter_slices_cover_batch():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sp = Splitter(mesh, ("pod", "data"))
+    slices = sp.slices(8)
+    assert slices[0] == (0, 8)
+    covered = sorted(x for lo, hi in slices for x in range(lo, hi))
+    assert covered == list(range(8))
+
+
+def test_slice_independence():
+    """Each row is generated independently: slice == slice of the whole
+    (the distributor can hand any shard to any host)."""
+    spec = BatchSpec(global_batch=8, seq_len=8, vocab=100)
+    st = SyntheticLMStream(spec, seed=1)
+    full = st.batch(5)
+    part = st.batch(5, lo=2, hi=5)
+    np.testing.assert_array_equal(full["tokens"][2:5], part["tokens"])
+
+
+def test_distributor_materializes_sharded():
+    spec = BatchSpec(global_batch=4, seq_len=8, vocab=50)
+    stream = SyntheticLMStream(spec)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
+    dist = Distributor(mesh, Splitter(mesh, ("data",)))
+    batch = dist.materialize(stream, 0, sh)
+    assert batch["tokens"].shape == (4, 8)
+    assert batch["tokens"].sharding == sh
+
+
+def test_double_buffered_feed_overlaps():
+    made = []
+
+    def make(step):
+        time.sleep(0.02)
+        made.append(step)
+        return {"step": step}
+
+    feed = DoubleBufferedFeed(make, depth=2)
+    t0 = time.perf_counter()
+    for i in range(5):
+        step, batch = next(feed)
+        assert batch["step"] == step == i
+        time.sleep(0.02)                  # "compute"
+    elapsed = time.perf_counter() - t0
+    feed.close()
+    # serial would be >= 10 * 0.02; overlap should beat it comfortably
+    assert elapsed < 0.18, elapsed
+    assert len(feed.transfer_seconds) >= 5

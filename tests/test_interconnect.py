@@ -1,0 +1,67 @@
+"""Interconnect models: paper Fig. 4/5 trends + collective cost algebra."""
+
+import pytest
+
+from repro.core import mesh as hw
+from repro.core.interconnect import (TOP_1, TOP_4, TOP_H, CollectiveModel,
+                                     TopologyModel)
+
+
+def test_topology_saturation_ordering():
+    """Paper Fig. 4: Top_1 saturates ~0.10, Top_4 ~0.37, Top_H ~0.40."""
+    t1 = TopologyModel(TOP_1)
+    t4 = TopologyModel(TOP_4)
+    th = TopologyModel(TOP_H)
+    load = 0.5
+    a1 = t1.accepted_load(load)
+    a4 = t4.accepted_load(load)
+    ah = th.accepted_load(load)
+    assert a1 < a4 <= ah
+    assert a1 == pytest.approx(0.105, abs=0.02)
+    assert ah == pytest.approx(0.41, abs=0.05)
+
+
+def test_latency_blows_up_near_saturation():
+    th = TopologyModel(TOP_H)
+    assert th.avg_latency(0.05) < 6.0            # paper: <6 cycles @ light load
+    assert th.avg_latency(0.39) > th.avg_latency(0.10) * 2
+
+
+def test_hybrid_addressing_raises_throughput():
+    """Paper Fig. 5: raising p_local raises accepted load + cuts latency."""
+    th = TopologyModel(TOP_H)
+    load = 2.0                      # deep in saturation for every p_local
+    acc = [th.accepted_load(load, p_local=p) for p in (0.0, 0.25, 0.5, 0.75)]
+    assert all(b > a for a, b in zip(acc, acc[1:]))
+    lat = [th.avg_latency(0.3, p_local=p) for p in (0.0, 0.25, 0.5, 0.75)]
+    assert all(b < a for a, b in zip(lat, lat[1:]))
+
+
+def test_paper_fig5_quantitative_claim():
+    """Paper §3.3.2: 25% stack accesses -> up to ~27% throughput gain."""
+    th = TopologyModel(TOP_H)
+    load = 0.5
+    gain = th.accepted_load(load, 0.25) / th.accepted_load(load, 0.0) - 1
+    assert 0.15 < gain < 0.40, gain
+
+
+def test_collective_model_algebra():
+    topo = hw.v5e_topology((16, 16), ("data", "model"))
+    cm = CollectiveModel(topo)
+    n = 16
+    shard = 1e6
+    ag = cm.all_gather(shard, "model")
+    assert ag.bytes_on_wire == shard * (n - 1)
+    rs = cm.reduce_scatter(shard * n, "model")
+    assert rs.bytes_on_wire == pytest.approx(shard * (n - 1))
+    ar = cm.all_reduce(shard * n, "model")
+    assert ar.seconds == pytest.approx(rs.seconds + cm.all_gather(
+        shard, "model").seconds)
+    assert cm.all_gather(shard, "model").seconds > 0
+
+
+def test_single_axis_degenerate():
+    topo = hw.v5e_topology((1, 4), ("data", "model"))
+    cm = CollectiveModel(topo)
+    assert cm.all_gather(1e6, "data").seconds == 0.0
+    assert cm.all_reduce(1e6, "data").bytes_on_wire == 0.0

@@ -1,0 +1,128 @@
+"""Per-kernel allclose sweeps against the ref.py oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (256, 256, 256, 128, 128, 128),
+    (512, 384, 256, 128, 128, 128),
+    (128, 512, 640, 128, 128, 256),
+])
+def test_matmul_sweep(dtype, m, k, n, bm, bn, bk):
+    a = rand(jax.random.PRNGKey(0), (m, k), dtype)
+    b = rand(jax.random.PRNGKey(1), (k, n), dtype)
+    got = ops.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(512, 128), (1024, 256), (2048, 512)])
+def test_axpy_sweep(dtype, shape):
+    x = rand(jax.random.PRNGKey(2), shape, dtype)
+    y = rand(jax.random.PRNGKey(3), shape, dtype)
+    np.testing.assert_allclose(
+        ops.axpy(1.7, x, y).astype(np.float32),
+        ref.axpy(1.7, x, y).astype(np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("shape", [(512, 128), (1024, 384)])
+def test_dotp_sweep(shape):
+    x = rand(jax.random.PRNGKey(4), shape, jnp.float32)
+    y = rand(jax.random.PRNGKey(5), shape, jnp.float32)
+    np.testing.assert_allclose(ops.dotp(x, y), ref.dotp(x, y),
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("hw", [(256, 128), (512, 256), (1024, 128)])
+def test_conv2d_sweep(hw):
+    img = rand(jax.random.PRNGKey(6), hw, jnp.float32)
+    w = rand(jax.random.PRNGKey(7), (3, 3), jnp.float32)
+    np.testing.assert_allclose(ops.conv2d_3x3(img, w), ref.conv2d_3x3(img, w),
+                               rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [512, 1024, 2048])
+def test_dct8x8_sweep(n):
+    blocks = rand(jax.random.PRNGKey(8), (n, 8, 8), jnp.float32)
+    np.testing.assert_allclose(ops.dct8x8(blocks), ref.dct8x8(blocks),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_dct_energy_preservation():
+    """2-D DCT is orthonormal: per-block energy is preserved."""
+    blocks = rand(jax.random.PRNGKey(9), (256, 8, 8), jnp.float32)
+    out = np.asarray(ops.dct8x8(blocks), np.float64)
+    inp = np.asarray(blocks, np.float64)
+    np.testing.assert_allclose((out ** 2).sum(axis=(1, 2)),
+                               (inp ** 2).sum(axis=(1, 2)), rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(256, 512), (512, 768)])
+def test_rmsnorm_sweep(dtype, shape):
+    x = rand(jax.random.PRNGKey(10), shape, dtype)
+    s = rand(jax.random.PRNGKey(11), shape[-1:], jnp.float32) * 0.1
+    np.testing.assert_allclose(
+        ops.rmsnorm(x, s.astype(dtype)).astype(np.float32),
+        ref.rmsnorm(x, s.astype(dtype)).astype(np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,hd,bq,bk", [
+    (2, 4, 4, 256, 64, 64, 64),       # MHA
+    (2, 4, 2, 256, 64, 128, 64),      # GQA group 2
+    (1, 8, 1, 512, 128, 128, 128),    # MQA
+])
+def test_flash_attention_sweep(dtype, b, h, kv, s, hd, bq, bk):
+    q = rand(jax.random.PRNGKey(12), (b, h, s, hd), dtype)
+    k = rand(jax.random.PRNGKey(13), (b, kv, s, hd), dtype)
+    v = rand(jax.random.PRNGKey(14), (b, kv, s, hd), dtype)
+    got = ops.flash_attention(q, k, v, bq=bq, bk=bk)
+    kr = jnp.repeat(k, h // kv, axis=1)
+    vr = jnp.repeat(v, h // kv, axis=1)
+    want = ref.flash_attention(q, kr, vr)
+    tol = dict(rtol=2e-3, atol=2e-3) if dtype == jnp.float32 \
+        else dict(rtol=6e-2, atol=6e-2)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **tol)
+
+
+def test_flash_attention_non_causal():
+    q = rand(jax.random.PRNGKey(15), (1, 2, 128, 64), jnp.float32)
+    k = rand(jax.random.PRNGKey(16), (1, 2, 128, 64), jnp.float32)
+    v = rand(jax.random.PRNGKey(17), (1, 2, 128, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(mb=st.integers(1, 4), kb=st.integers(1, 4), nb=st.integers(1, 4),
+       seed=st.integers(0, 2 ** 16))
+def test_matmul_property(mb, kb, nb, seed):
+    """Property: kernel == oracle for arbitrary block-aligned shapes."""
+    m, k, n = 128 * mb, 128 * kb, 128 * nb
+    a = rand(jax.random.PRNGKey(seed), (m, k), jnp.float32)
+    b = rand(jax.random.PRNGKey(seed + 1), (k, n), jnp.float32)
+    np.testing.assert_allclose(ops.matmul(a, b, bm=128, bn=128, bk=128),
+                               ref.matmul(a, b), rtol=2e-4, atol=2e-4)
