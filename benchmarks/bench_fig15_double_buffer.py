@@ -33,16 +33,18 @@ def run(produce_s: float, compute_s: float, steps: int = 12) -> dict:
             "compute_util": steps * compute_s / wall}
 
 
-def main() -> list[str]:
+def main(smoke: bool = False) -> list[str]:
     lines = []
+    steps = 4 if smoke else 12
+    scale = 0.25 if smoke else 1.0
     for name, (p, c) in {
         "compute_bound": (0.005, 0.02),     # paper: matmul/dct rounds
         "balanced": (0.01, 0.01),
         "transfer_bound": (0.02, 0.007),    # paper: axpy/dotp (L2-bound)
     }.items():
-        r = run(p, c)
+        r = run(p * scale, c * scale, steps=steps)
         lines.append(
-            f"fig15/{name},{r['wall'] * 1e6 / 12:.0f},"
+            f"fig15/{name},{r['wall'] * 1e6 / steps:.0f},"
             f"compute_util={r['compute_util']:.2f};"
             f"overlap_eff={max(min(r['overlap_efficiency'], 1.5), 0):.2f}")
     return lines

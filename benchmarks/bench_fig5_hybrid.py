@@ -26,7 +26,7 @@ _SUB = textwrap.dedent("""
     import json
     import jax
     from repro.configs import get, SHAPES
-    from repro.core import addressing, hlo_cost
+    from repro.core import addressing, compat, hlo_cost
     from repro.launch import dryrun as dr
     from repro.launch.mesh import make_test_mesh
     import dataclasses
@@ -42,7 +42,7 @@ _SUB = textwrap.dedent("""
         rules = addressing.default_rules(mesh, overrides=cfg.rules_overrides)
         fn, args, in_sh, out_sh, donate = dr.build_cell(
             cfg, SHAPES["train_4k"], mesh, rules)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                                donate_argnums=donate).lower(*args).compile()
         costs = hlo_cost.analyze(compiled.as_text())
@@ -110,7 +110,11 @@ def measured(timeout: int = 900) -> list[str]:
             f"fig5/measured_gain,0,collective_reduction={ratio:.2f}x"]
 
 
-def main() -> list[str]:
+def main(smoke: bool = False) -> list[str]:
+    if smoke:
+        # smoke lane: the analytic sweep only — the measured path compiles a
+        # 4-layer mixtral in a subprocess and takes minutes
+        return model_sweep() + ["fig5/measured,0,skipped(smoke)"]
     return model_sweep() + measured()
 
 

@@ -5,6 +5,11 @@ derives the quantities the paper reports per kernel: operation count,
 arithmetic intensity, and the projected TPU-v5e roofline utilization
 (min(peak_flops, intensity * HBM_bw) — the hardware-honest analogue of the
 paper's OP/cycle column; MemPool's 32-bit MACs count as 2 OPs there).
+
+Second section: tuned-vs-default through the tile-pipeline layer — for every
+registered kernel, the autotuner's blocking (kernels/pipeline.autotune,
+scored on the roofline + interconnect cost models) against the hand-picked
+defaults, with both measured wall time and modeled seconds.
 """
 
 from __future__ import annotations
@@ -16,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mesh as hw
-from repro.kernels import ops
+from repro.kernels import ops, pipeline as pp
 
 
 def timeit(fn, *args, reps: int = 3) -> float:
@@ -28,50 +33,53 @@ def timeit(fn, *args, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def rows() -> list[dict]:
+def rows(smoke: bool = False) -> list[dict]:
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 8)
     out = []
+    reps = 1 if smoke else 3
 
     # matmul 256x256 (paper size), bf16-on-TPU modeled as f32 here
-    n = 256
+    n = 128 if smoke else 256
     a = jax.random.normal(ks[0], (n, n), jnp.float32)
     b = jax.random.normal(ks[1], (n, n), jnp.float32)
     flops = 2 * n ** 3
     bytes_ = 3 * n * n * 4
     out.append(_row("matmul", f"{n}x{n}", lambda: ops.matmul(a, b, bm=128,
                                                              bn=128, bk=128),
-                    flops, bytes_))
+                    flops, bytes_, reps=reps))
 
     # 2dconv 96x1024 with 3x3 kernel (paper size)
-    img = jax.random.normal(ks[2], (96, 1024), jnp.float32)
+    H, W = (32, 256) if smoke else (96, 1024)
+    img = jax.random.normal(ks[2], (H, W), jnp.float32)
     w = jax.random.normal(ks[3], (3, 3), jnp.float32)
-    flops = 2 * 9 * 96 * 1024
-    bytes_ = 2 * 96 * 1024 * 4
-    out.append(_row("2dconv", "96x1024", lambda: ops.conv2d_3x3(img, w),
-                    flops, bytes_))
+    flops = 2 * 9 * H * W
+    bytes_ = 2 * H * W * 4
+    out.append(_row("2dconv", f"{H}x{W}", lambda: ops.conv2d_3x3(img, w),
+                    flops, bytes_, reps=reps))
 
     # dct 192x1024 image = 24576 8x8 blocks (paper size)
-    blocks = jax.random.normal(ks[4], (192 * 1024 // 64, 8, 8), jnp.float32)
-    nblk = blocks.shape[0]
+    nblk = 512 if smoke else 192 * 1024 // 64
+    blocks = jax.random.normal(ks[4], (nblk, 8, 8), jnp.float32)
     flops = nblk * 2 * 2 * 8 ** 3          # two 8x8x8 matmuls per block
     bytes_ = 2 * nblk * 64 * 4
-    out.append(_row("dct", "192x1024", lambda: ops.dct8x8(blocks), flops,
-                    bytes_))
+    out.append(_row("dct", f"{nblk}blk", lambda: ops.dct8x8(blocks), flops,
+                    bytes_, reps=reps))
 
     # axpy / dotp over 98304 elements (paper size)
-    m = 98304 // 128
+    total = 8192 if smoke else 98304
+    m = total // 128
     x = jax.random.normal(ks[5], (m, 128), jnp.float32)
     y = jax.random.normal(ks[6], (m, 128), jnp.float32)
-    out.append(_row("axpy", "98304", lambda: ops.axpy(2.0, x, y),
-                    2 * 98304, 3 * 98304 * 4))
-    out.append(_row("dotp", "98304", lambda: ops.dotp(x, y),
-                    2 * 98304, 2 * 98304 * 4))
+    out.append(_row("axpy", str(total), lambda: ops.axpy(2.0, x, y),
+                    2 * total, 3 * total * 4, reps=reps))
+    out.append(_row("dotp", str(total), lambda: ops.dotp(x, y),
+                    2 * total, 2 * total * 4, reps=reps))
     return out
 
 
-def _row(name, size, fn, flops, bytes_) -> dict:
-    us = timeit(lambda: fn()) * 1e6
+def _row(name, size, fn, flops, bytes_, reps: int = 3) -> dict:
+    us = timeit(lambda: fn(), reps=reps) * 1e6
     intensity = flops / bytes_
     roof = min(hw.PEAK_FLOPS_BF16, intensity * hw.HBM_BW)
     # paper comparison: measured OP/cycle fraction of MemPool's 512 peak
@@ -84,13 +92,76 @@ def _row(name, size, fn, flops, bytes_) -> dict:
             "mempool_frac": paper_frac}
 
 
-def main() -> list[str]:
+# ----------------------------------------------------------------------------
+# tuned vs default through the pipeline layer
+# ----------------------------------------------------------------------------
+
+def _tune_operands(smoke: bool) -> dict[str, tuple]:
+    ks = jax.random.split(jax.random.PRNGKey(1), 16)
+    if smoke:
+        mn, mm, s = (64, 128), (128, 128, 128), 128
+        hwc, nblk, rms = (32, 256), 256, (64, 128)
+    else:
+        mn, mm, s = (768, 128), (512, 512, 512), 512
+        hwc, nblk, rms = (96, 1024), 3072, (512, 512)
+    return {
+        "axpy": (2.0, jax.random.normal(ks[0], mn, jnp.float32),
+                 jax.random.normal(ks[1], mn, jnp.float32)),
+        "dotp": (jax.random.normal(ks[2], mn, jnp.float32),
+                 jax.random.normal(ks[3], mn, jnp.float32)),
+        "matmul": (jax.random.normal(ks[4], (mm[0], mm[2]), jnp.float32),
+                   jax.random.normal(ks[5], (mm[2], mm[1]), jnp.float32)),
+        "conv2d": (jax.random.normal(ks[6], hwc, jnp.float32),
+                   jax.random.normal(ks[7], (3, 3), jnp.float32)),
+        "dct8x8": (jax.random.normal(ks[8], (nblk, 8, 8), jnp.float32),),
+        "rmsnorm": (jax.random.normal(ks[9], rms, jnp.float32),
+                    jax.random.normal(ks[10], rms[-1:], jnp.float32) * 0.1),
+        "flash_attention": (
+            jax.random.normal(ks[11], (1, 4, s, 64), jnp.float32),
+            jax.random.normal(ks[12], (1, 2, s, 64), jnp.float32),
+            jax.random.normal(ks[13], (1, 2, s, 64), jnp.float32)),
+    }
+
+
+def tuned_rows(smoke: bool = False) -> list[dict]:
+    reps = 1 if smoke else 3
+    out = []
+    for name, operands in _tune_operands(smoke).items():
+        shapes = ops.kernel_shapes(name, *operands)
+        result = pp.autotune(name, shapes)
+        wrapper = ops.wrapper_for(name)
+        t_def = timeit(lambda: wrapper(*operands, **result.default_blocks),
+                       reps=reps)
+        t_tuned = timeit(lambda: wrapper(*operands, **result.blocks),
+                         reps=reps)
+        out.append({
+            "name": f"table1_tuned/{name}",
+            "blocks": dict(result.blocks),
+            "default_blocks": dict(result.default_blocks),
+            "us_default": t_def * 1e6,
+            "us_tuned": t_tuned * 1e6,
+            "modeled_default_s": result.default_cost.total_s,
+            "modeled_tuned_s": result.cost.total_s,
+            "modeled_speedup": result.modeled_speedup,
+            "p_local": result.cost.p_local,
+        })
+    return out
+
+
+def main(smoke: bool = False) -> list[str]:
     lines = []
-    for r in rows():
+    for r in rows(smoke):
         lines.append(
             f"{r['name']},{r['us_per_call']:.1f},"
             f"intensity={r['intensity']:.2f};roof_frac="
             f"{r['tpu_roofline_frac']:.3f};mempool_frac={r['mempool_frac']:.3f}")
+    for r in tuned_rows(smoke):
+        blocks = "/".join(f"{k}={v}" for k, v in sorted(r["blocks"].items()))
+        lines.append(
+            f"{r['name']},{r['us_tuned']:.1f},"
+            f"default_us={r['us_default']:.1f};blocks={blocks};"
+            f"modeled_speedup={r['modeled_speedup']:.2f};"
+            f"p_local={r['p_local']:.3f}")
     return lines
 
 

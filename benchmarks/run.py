@@ -3,15 +3,26 @@
 Prints ``name,us_per_call,derived`` CSV rows, exactly one section per paper
 artifact (Table 1, Fig. 4, 5, 13, 14, 15, 16). Modules degrade gracefully
 when optional inputs (dry-run results) are absent.
+
+Flags:
+  --smoke       tiny shapes / model-only paths so every bench finishes in
+                seconds — the CI smoke lane
+  --json PATH   also write the rows as structured JSON (uploaded as a CI
+                artifact)
+  --only NAMES  comma-separated subset of sections
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
+import json
 import sys
 import time
 import traceback
 from pathlib import Path
 
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from benchmarks import (bench_fig4_interconnect, bench_fig5_hybrid,  # noqa: E402
@@ -30,19 +41,68 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def _call_main(mod, smoke: bool) -> list[str]:
+    if "smoke" in inspect.signature(mod.main).parameters:
+        return mod.main(smoke=smoke)
+    return mod.main()
+
+
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"name": name, "us_per_call": us_val, "derived": derived}
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes; every section in seconds")
+    ap.add_argument("--json", default=None,
+                    help="write structured results to this path")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section subset (e.g. table1,fig4)")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - {name for name, _ in MODULES}
+        if unknown:
+            ap.error(f"unknown section(s) {sorted(unknown)}; "
+                     f"available: {[n for n, _ in MODULES]}")
     print("name,us_per_call,derived")
     failed = []
+    results: dict = {"smoke": args.smoke, "timestamp": time.time(),
+                     "sections": {}}
     for name, mod in MODULES:
+        if only is not None and name not in only:
+            continue
         t0 = time.perf_counter()
         try:
-            for line in mod.main():
+            lines = _call_main(mod, args.smoke)
+            for line in lines:
                 print(line)
-        except Exception:
+            results["sections"][name] = {
+                "status": "ok",
+                "seconds": time.perf_counter() - t0,
+                "rows": [_parse_row(l) for l in lines],
+            }
+        except Exception as e:
             failed.append(name)
             traceback.print_exc()
+            results["sections"][name] = {
+                "status": "error",
+                "seconds": time.perf_counter() - t0,
+                "error": f"{type(e).__name__}: {e}",
+            }
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               file=sys.stderr)
+    if args.json:
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json).write_text(json.dumps(results, indent=2))
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

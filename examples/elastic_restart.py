@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.core import compat
 from repro.configs import get
 from repro.models import steps
 from repro.runtime.coordination import Coordinator, replan_mesh_shape
@@ -65,8 +66,7 @@ def main():
     # phase 3: fresh process view — restore the LOGICAL state onto the
     # survivors' mesh (here: 1-device CPU mesh; layout is mesh-independent)
     latest = mgr.latest_step()
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda _: jax.sharding.NamedSharding(mesh,
                                              jax.sharding.PartitionSpec()),

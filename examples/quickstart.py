@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs import get
 from repro.core import addressing
+from repro.core import compat
 from repro.models import steps
 
 # 1. pick an architecture (any of the ten; -smoke = reduced same-family)
@@ -24,8 +25,7 @@ cfg = get("qwen3-14b-smoke")
 print(f"arch={cfg.name}: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab}")
 
 # 2. the hybrid addressing plan: logical axes -> mesh placement
-mesh = jax.make_mesh((1, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((1, 1), ("data", "model"))
 rules = addressing.default_rules(mesh)
 print("ffn weight spec:", rules.spec_for(("embed", "ffn"), (64, 128), mesh),
       "(INTERLEAVED region)")

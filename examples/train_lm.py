@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs import get
 from repro.core import addressing
+from repro.core import compat
 from repro.data import DoubleBufferedFeed, Distributor, Splitter, SyntheticLMStream
 from repro.data.pipeline import BatchSpec
 from repro.models import steps
@@ -47,8 +48,7 @@ def main():
     n = cfg.n_params()
     print(f"model: {cfg.name} variant, {n / 1e6:.1f}M params")
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     rules = addressing.default_rules(mesh, overrides=cfg.rules_overrides)
 
     state = steps.init_train_state(cfg, jax.random.PRNGKey(0),

@@ -16,7 +16,7 @@ from typing import Any, Iterator
 import jax
 
 from repro.configs import get
-from repro.core import addressing
+from repro.core import addressing, compat
 from repro.data import Distributor, Splitter, SyntheticLMStream
 from repro.data.pipeline import BatchSpec
 from repro.models import steps
@@ -51,9 +51,8 @@ def train(arch: str, *, steps_: int = 100, batch: int = 4, seq: int = 128,
           mesh: jax.sharding.Mesh | None = None, seed: int = 0) -> dict:
     """One-call training on the synthetic stream. Returns the loop report."""
     cfg = get(arch + ("-smoke" if smoke else ""))
-    mesh = mesh or jax.make_mesh(
-        (jax.device_count(), 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh or compat.make_mesh((jax.device_count(), 1),
+                                    ("data", "model"))
     rules = addressing.default_rules(mesh, overrides=cfg.rules_overrides)
 
     state = steps.init_train_state(cfg, jax.random.PRNGKey(seed), max_seq=seq)

@@ -198,6 +198,47 @@ MEMPOOL_PAPER = dict(
 
 
 # ----------------------------------------------------------------------------
+# Kernel tune records (written by kernels/pipeline.autotune)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelTuneRecord:
+    """One autotuned blocking for a (kernel, shape) cell.
+
+    `blocks` / `default_blocks` are sorted (name, value) tuples so records
+    stay hashable; `modeled_seconds` are the pipeline cost-model scores the
+    autotuner ranked with (roofline terms x interconnect locality penalty).
+    """
+
+    kernel: str
+    shape_key: str
+    blocks: tuple[tuple[str, int], ...]
+    modeled_seconds: float
+    default_blocks: tuple[tuple[str, int], ...] = ()
+    default_modeled_seconds: float = 0.0
+
+    @property
+    def modeled_speedup(self) -> float:
+        return self.default_modeled_seconds / max(self.modeled_seconds, 1e-30)
+
+
+KERNEL_TUNES: dict[tuple[str, str], KernelTuneRecord] = {}
+
+
+def register_kernel_tune(rec: KernelTuneRecord) -> KernelTuneRecord:
+    KERNEL_TUNES[(rec.kernel, rec.shape_key)] = rec
+    return rec
+
+
+def get_kernel_tune(kernel: str, shape_key: str) -> KernelTuneRecord | None:
+    return KERNEL_TUNES.get((kernel, shape_key))
+
+
+def kernel_tunes() -> list[KernelTuneRecord]:
+    return [KERNEL_TUNES[k] for k in sorted(KERNEL_TUNES)]
+
+
+# ----------------------------------------------------------------------------
 # Reduced same-family smoke variants
 # ----------------------------------------------------------------------------
 

@@ -1,0 +1,82 @@
+"""Version-bridging helpers over the JAX API surface this repo targets.
+
+The codebase is written against the current jax mesh/sharding API
+(`jax.set_mesh`, `jax.sharding.AxisType`, `jax.shard_map`, the
+positional `AbstractMesh(shape, axis_names)` constructor).  Older
+installs (0.4.x) expose the same functionality under different names and
+signatures; everything that touches those entry points goes through this
+module so the rest of the code reads as if only the modern API existed.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import inspect
+from typing import Any, Sequence
+
+import jax
+
+__all__ = ["make_mesh", "abstract_mesh", "shard_map", "set_mesh"]
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices: Sequence[Any] | None = None) -> jax.sharding.Mesh:
+    """`jax.make_mesh` with Auto axis types where the install supports them."""
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" in params and hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (
+            (jax.sharding.AxisType.Auto,) * len(tuple(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def abstract_mesh(axis_shapes: Sequence[int],
+                  axis_names: Sequence[str]) -> jax.sharding.AbstractMesh:
+    """AbstractMesh across both constructor generations."""
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    try:
+        return jax.sharding.AbstractMesh(shapes, names)
+    except TypeError:
+        # 0.4.x signature: a tuple of (axis_name, axis_size) pairs.
+        return jax.sharding.AbstractMesh(tuple(zip(names, shapes)))
+
+
+def _resolve_shard_map():
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map as sm
+    return sm
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None,
+              **kwargs):
+    """`jax.shard_map`, translating `check_vma` to the legacy `check_rep`."""
+    sm = _resolve_shard_map()
+    params = inspect.signature(sm).parameters
+    if check_vma is not None:
+        if "check_vma" in params:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in params:
+            kwargs["check_rep"] = check_vma
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """`jax.set_mesh` where available; the legacy Mesh context otherwise.
+
+    Call sites pair this with `jax.jit(..., in_shardings=..., out_shardings=...)`
+    whose NamedShardings already carry the mesh, so the legacy fallback only
+    needs to provide an ambient mesh for with_sharding_constraint-style uses.
+    """
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield
+    elif isinstance(mesh, jax.sharding.Mesh):
+        with mesh:
+            yield
+    else:                                   # AbstractMesh on a legacy install
+        yield

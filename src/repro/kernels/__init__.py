@@ -1,8 +1,10 @@
 """Pallas TPU kernels: the paper's Table-1 suite + LM hot-spot kernels.
 
-Each <name>.py holds the pl.pallas_call + BlockSpec implementation;
-ops.py the jit'd public wrappers (interpret=True off-TPU); ref.py the
-pure-jnp oracles the tests assert against.
+pipeline.py is the shared tile-pipeline layer (TileSpec / KernelPipeline /
+autotuner); each <name>.py describes its kernel on that layer and registers
+its traffic model + tune space; ops.py holds the jit'd public wrappers
+(interpret=True off-TPU) and the tuned dispatch; ref.py the pure-jnp
+oracles the tests assert against.
 """
 
-from . import ops, ref  # noqa: F401
+from . import ops, pipeline, ref  # noqa: F401

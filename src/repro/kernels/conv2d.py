@@ -1,11 +1,17 @@
 """3x3 2-D convolution — the paper's `2dconv` kernel.
 
 MemPool tiles the image so each core's pixels live in its own tile (local
-accesses except at tile edges). TPU translation: the grid walks row-blocks;
-halo rows arrive as two extra views of the same input whose index_maps point
-at the neighbor blocks (clamped at the image edges), so each VMEM tile has
-its "remote" halo delivered by the pipeline rather than re-fetched — the
-neighbor-tile access of the paper.
+accesses except at tile edges). TPU translation on the tile-pipeline layer:
+the grid walks row-blocks; halo rows arrive as two extra TileSpec views of
+the same input whose index_maps point at the neighbor blocks (clamped at the
+image edges), so each VMEM tile has its "remote" halo delivered by the
+pipeline rather than re-fetched — the neighbor-tile access of the paper.
+Because the halo arrives as full neighbor-block views, the input is streamed
+~3x regardless of block height (p_local is flat at ~0.5 — the fixed price of
+this halo scheme); tuning block_rows trades per-step pipeline overhead
+against the VMEM footprint only. Fetching halo *rows* instead of blocks
+would let taller blocks genuinely shrink the re-streamed share — a future
+optimization the traffic model would reward automatically.
 """
 
 from __future__ import annotations
@@ -15,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import pipeline as pp
 
 
 def _conv_kernel(x_ref, up_ref, dn_ref, w_ref, o_ref, *, n_blocks: int):
@@ -48,29 +55,61 @@ def _conv_kernel(x_ref, up_ref, dn_ref, w_ref, o_ref, *, n_blocks: int):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
-def conv2d_3x3(x: jax.Array, w: jax.Array, *, block_rows: int = 256,
+def build_pipeline(H: int, W: int, dtype, *, block_rows: int | None = None,
+                   dtype_bytes: int = 4) -> pp.KernelPipeline:
+    bh = pp.resolve_block(H, block_rows, default=256)
+    n_blocks = H // bh
+    clamp = lambda i, lo, hi: jnp.clip(i, lo, hi)
+    return pp.KernelPipeline(
+        name="conv2d",
+        body=functools.partial(_conv_kernel, n_blocks=n_blocks),
+        grid=(pp.GridAxis("rows", n_blocks, "arbitrary"),),
+        in_tiles=[
+            pp.TileSpec((bh, W), lambda i: (i, 0)),
+            pp.TileSpec((bh, W),
+                        lambda i: (clamp(i - 1, 0, n_blocks - 1), 0)),
+            pp.TileSpec((bh, W),
+                        lambda i: (clamp(i + 1, 0, n_blocks - 1), 0)),
+            pp.TileSpec((3, 3), lambda i: (0, 0)),
+        ],
+        out_tiles=pp.TileSpec((bh, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), dtype),
+        cost=traffic({"h": H, "w": W}, {"block_rows": bh}, dtype_bytes),
+    )
+
+
+def conv2d_3x3(x: jax.Array, w: jax.Array, *, block_rows: int | None = None,
                interpret: bool = False) -> jax.Array:
     """x: (H, W); w: (3, 3); zero-padded same correlation."""
     H, W = x.shape
-    bh = min(block_rows, H)
-    assert H % bh == 0
+    pipe = build_pipeline(H, W, x.dtype, block_rows=block_rows,
+                          dtype_bytes=x.dtype.itemsize)
+    return pipe(x, x, x, w, interpret=interpret)
+
+
+# -- pipeline-layer contract --------------------------------------------------
+
+def traffic(shapes: dict, blocks: dict, dtype_bytes: int = 4) -> pp.Traffic:
+    H, W = shapes["h"], shapes["w"]
+    bh = min(blocks["block_rows"], H)
     n_blocks = H // bh
-    kernel = functools.partial(_conv_kernel, n_blocks=n_blocks)
-    clamp = lambda i, lo, hi: jnp.clip(i, lo, hi)
-    return pl.pallas_call(
-        kernel,
-        grid=(n_blocks,),
-        in_specs=[
-            pl.BlockSpec((bh, W), lambda i: (i, 0)),
-            pl.BlockSpec((bh, W),
-                         lambda i: (clamp(i - 1, 0, n_blocks - 1), 0)),
-            pl.BlockSpec((bh, W),
-                         lambda i: (clamp(i + 1, 0, n_blocks - 1), 0)),
-            pl.BlockSpec((3, 3), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((H, W), x.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
-        interpret=interpret,
-    )(x, x, x, w)
+    # the pipeline fetches the center block plus both neighbor views per step
+    streamed = dtype_bytes * (3 * H * W + H * W) + 9 * 4 * n_blocks
+    ideal = dtype_bytes * 2 * H * W + 9 * 4
+    return pp.Traffic(
+        flops=2.0 * 9 * H * W,
+        hbm_bytes=float(streamed),
+        ideal_bytes=float(ideal),
+        grid_steps=n_blocks,
+        vmem_bytes=2 * 4 * bh * W * dtype_bytes + 9 * 4,
+    )
+
+
+def tune_space(shapes: dict):
+    for bh in pp.block_candidates(shapes["h"], align=8):
+        yield {"block_rows": bh}
+
+
+pp.register(pp.KernelDef(
+    name="conv2d", traffic=traffic, tune_space=tune_space,
+    default_blocks=lambda shapes: {"block_rows": pp.snap_block(shapes["h"], 256)}))

@@ -1,17 +1,17 @@
 """8x8 2-D DCT — the paper's `dct` kernel (JPEG-style block transform).
 
 MemPool cores each own local 8x8 blocks and use the stack for intermediates.
-TPU translation: a batch of blocks per grid step, the (8, 8) basis matrix
-resident in VMEM, two small matmuls per block batched on the MXU:
-Y = C X C^T.
+TPU translation on the tile-pipeline layer: a batch of blocks per grid step,
+the (8, 8) basis matrix resident in VMEM (constant index_map = never
+re-fetched), two small matmuls per block batched on the MXU: Y = C X C^T.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import pipeline as pp
 
 
 def _dct_kernel(x_ref, c_ref, o_ref):
@@ -23,24 +23,54 @@ def _dct_kernel(x_ref, c_ref, o_ref):
     o_ref[...] = y.astype(o_ref.dtype)
 
 
-def dct8x8(blocks: jax.Array, *, block_n: int = 512,
+def build_pipeline(n: int, dtype, *, block_n: int | None = None,
+                   dtype_bytes: int = 4) -> pp.KernelPipeline:
+    bn = pp.resolve_block(n, block_n, default=512)
+    return pp.KernelPipeline(
+        name="dct8x8",
+        body=_dct_kernel,
+        grid=(pp.GridAxis("blocks", n // bn, "parallel"),),
+        in_tiles=[
+            pp.TileSpec((bn, 8, 8), lambda i: (i, 0, 0)),
+            pp.TileSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_tiles=pp.TileSpec((bn, 8, 8), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 8, 8), dtype),
+        cost=traffic({"n": n}, {"block_n": bn}, dtype_bytes),
+    )
+
+
+def dct8x8(blocks: jax.Array, *, block_n: int | None = None,
            interpret: bool = False) -> jax.Array:
     """blocks: (N, 8, 8) -> per-block 2-D DCT."""
     from . import ref
     n = blocks.shape[0]
-    bn = min(block_n, n)
-    assert n % bn == 0
     c = jnp.asarray(ref.dct_matrix(8))
-    return pl.pallas_call(
-        _dct_kernel,
-        grid=(n // bn,),
-        in_specs=[
-            pl.BlockSpec((bn, 8, 8), lambda i: (i, 0, 0)),
-            pl.BlockSpec((8, 8), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bn, 8, 8), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(blocks.shape, blocks.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)),
-        interpret=interpret,
-    )(blocks, c)
+    pipe = build_pipeline(n, blocks.dtype, block_n=block_n,
+                          dtype_bytes=blocks.dtype.itemsize)
+    return pipe(blocks, c, interpret=interpret)
+
+
+# -- pipeline-layer contract --------------------------------------------------
+
+def traffic(shapes: dict, blocks: dict, dtype_bytes: int = 4) -> pp.Traffic:
+    n = shapes["n"]
+    bn = min(blocks["block_n"], n)
+    moved = 2 * n * 64 * dtype_bytes + 64 * 4
+    return pp.Traffic(
+        flops=4.0 * n * 8 ** 3,                 # two 8x8x8 matmuls per block
+        hbm_bytes=float(moved),
+        ideal_bytes=float(moved),
+        grid_steps=n // bn,
+        vmem_bytes=2 * 2 * bn * 64 * dtype_bytes + 64 * 4,
+    )
+
+
+def tune_space(shapes: dict):
+    for bn in pp.block_candidates(shapes["n"], align=8):
+        yield {"block_n": bn}
+
+
+pp.register(pp.KernelDef(
+    name="dct8x8", traffic=traffic, tune_space=tune_space,
+    default_blocks=lambda shapes: {"block_n": pp.snap_block(shapes["n"], 512)}))

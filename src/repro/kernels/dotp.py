@@ -3,7 +3,8 @@
 The paper's second memory-bound kernel. The reduction accumulates into a
 (1, 1) output block revisited by every grid step ("arbitrary" semantics =
 sequential on TPU), mirroring MemPool's per-core partial sums + final
-reduction tree.
+reduction tree. Expressed on the shared tile-pipeline layer: the revisited
+output block is the register tile, carried across the sequential axis.
 """
 
 from __future__ import annotations
@@ -11,7 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import pipeline as pp
 
 
 def _dotp_kernel(x_ref, y_ref, o_ref):
@@ -25,23 +27,52 @@ def _dotp_kernel(x_ref, y_ref, o_ref):
                           * y_ref[...].astype(jnp.float32))[None, None]
 
 
-def dotp(x: jax.Array, y: jax.Array, *, block_rows: int = 512,
+def build_pipeline(m: int, n: int, *, block_rows: int | None = None,
+                   dtype_bytes: int = 4) -> pp.KernelPipeline:
+    br = pp.resolve_block(m, block_rows, default=512)
+    return pp.KernelPipeline(
+        name="dotp",
+        body=_dotp_kernel,
+        grid=(pp.GridAxis("rows", m // br, "arbitrary"),),
+        in_tiles=[
+            pp.TileSpec((br, n), lambda i: (i, 0)),
+            pp.TileSpec((br, n), lambda i: (i, 0)),
+        ],
+        out_tiles=pp.TileSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        cost=traffic({"m": m, "n": n}, {"block_rows": br}, dtype_bytes),
+    )
+
+
+def dotp(x: jax.Array, y: jax.Array, *, block_rows: int | None = None,
          interpret: bool = False) -> jax.Array:
     """x, y: (M, N); returns scalar f32 sum(x*y)."""
     m, n = x.shape
-    br = min(block_rows, m)
-    assert m % br == 0
-    out = pl.pallas_call(
-        _dotp_kernel,
-        grid=(m // br,),
-        in_specs=[
-            pl.BlockSpec((br, n), lambda i: (i, 0)),
-            pl.BlockSpec((br, n), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
-        interpret=interpret,
-    )(x, y)
-    return out[0, 0]
+    pipe = build_pipeline(m, n, block_rows=block_rows,
+                          dtype_bytes=x.dtype.itemsize)
+    return pipe(x, y, interpret=interpret)[0, 0]
+
+
+# -- pipeline-layer contract --------------------------------------------------
+
+def traffic(shapes: dict, blocks: dict, dtype_bytes: int = 4) -> pp.Traffic:
+    m, n = shapes["m"], shapes["n"]
+    br = min(blocks["block_rows"], m)
+    moved = 2 * m * n * dtype_bytes + 4
+    return pp.Traffic(
+        flops=2.0 * m * n,
+        hbm_bytes=float(moved),
+        ideal_bytes=float(moved),
+        grid_steps=m // br,
+        vmem_bytes=2 * 2 * br * n * dtype_bytes,
+    )
+
+
+def tune_space(shapes: dict):
+    for br in pp.block_candidates(shapes["m"], align=8):
+        yield {"block_rows": br}
+
+
+pp.register(pp.KernelDef(
+    name="dotp", traffic=traffic, tune_space=tune_space,
+    default_blocks=lambda shapes: {"block_rows": pp.snap_block(shapes["m"], 512)}))

@@ -6,9 +6,12 @@ score block; this kernel keeps the (bq, bk) block, the online-softmax state
 so HBM traffic collapses to one read of q/k/v and one write of o — the
 "sequential region" of the attention computation in MemPool terms.
 
-Grid: (B, H, nq, nk) with the kv dim "arbitrary" (sequential) so the VMEM
-scratch carries across kv steps. GQA is expressed in the k/v index_maps
-(h -> h // group), no repeated KV in memory.
+On the tile-pipeline layer: grid (B, H, nq, nk) with the kv axis "arbitrary"
+(sequential) so the three VMEM scratch buffers — the register tile — carry
+across kv steps. GQA is expressed in the k/v TileSpec index_maps
+(h -> h // group), no repeated KV in memory. K/V are re-streamed once per
+query block, which is the reuse ratio the autotuner's locality term trades
+against the (bq x bk) score tile's VMEM footprint.
 """
 
 from __future__ import annotations
@@ -19,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from . import pipeline as pp
 
 NEG = -1e30
 
@@ -62,41 +67,99 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
-                    bk: int = 512, interpret: bool = False):
-    """q: (B, H, S, hd); k/v: (B, KV, S, hd) with H % KV == 0."""
-    b, h, s, hd = q.shape
-    kv = k.shape[1]
+def build_pipeline(b: int, h: int, kv: int, s: int, hd: int, dtype, *,
+                   causal: bool = True, bq: int | None = None,
+                   bk: int | None = None,
+                   dtype_bytes: int = 4) -> pp.KernelPipeline:
     group = h // kv
-    bq = min(bq, s)
-    bk = min(bk, s)
-    assert s % bq == 0 and s % bk == 0
+    bq = pp.resolve_block(s, bq, default=512)
+    bk = pp.resolve_block(s, bk, default=512)
     n_q, n_k = s // bq, s // bk
-    kernel = functools.partial(_fa_kernel, scale=hd ** -0.5, n_k=n_k,
-                               bq=bq, bk=bk, causal=causal)
-    return pl.pallas_call(
-        kernel,
-        grid=(b, h, n_q, n_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, i, j: (b_, h_, i, 0)),
-            pl.BlockSpec((1, 1, bk, hd),
-                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
-            pl.BlockSpec((1, 1, bk, hd),
-                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+    body = functools.partial(_fa_kernel, scale=hd ** -0.5, n_k=n_k,
+                             bq=bq, bk=bk, causal=causal)
+    return pp.KernelPipeline(
+        name="flash_attention",
+        body=body,
+        grid=(pp.GridAxis("batch", b, "parallel"),
+              pp.GridAxis("heads", h, "parallel"),
+              pp.GridAxis("q", n_q, "parallel"),
+              pp.GridAxis("kv", n_k, "arbitrary")),
+        in_tiles=[
+            pp.TileSpec((1, 1, bq, hd),
+                        lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pp.TileSpec((1, 1, bk, hd),
+                        lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pp.TileSpec((1, 1, bk, hd),
+                        lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, hd),
-                               lambda b_, h_, i, j: (b_, h_, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
-        scratch_shapes=[
+        out_tiles=pp.TileSpec((1, 1, bq, hd),
+                              lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), dtype),
+        scratch=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
-        interpret=interpret,
-    )(q, k, v)
+        cost=traffic({"b": b, "h": h, "kv": kv, "s": s, "hd": hd},
+                     {"bq": bq, "bk": bk}, dtype_bytes, causal=causal),
+    )
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int | None = None,
+                    bk: int | None = None, interpret: bool = False):
+    """q: (B, H, S, hd); k/v: (B, KV, S, hd) with H % KV == 0."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    pipe = build_pipeline(b, h, kv, s, hd, q.dtype, causal=causal,
+                          bq=bq, bk=bk, dtype_bytes=q.dtype.itemsize)
+    return pipe(q, k, v, interpret=interpret)
+
+
+# -- pipeline-layer contract --------------------------------------------------
+
+def traffic(shapes: dict, blocks: dict, dtype_bytes: int = 4, *,
+            causal: bool = True) -> pp.Traffic:
+    b, h, s, hd = shapes["b"], shapes["h"], shapes["s"], shapes["hd"]
+    kv = shapes["kv"]
+    bq = min(blocks["bq"], s)
+    bk = min(blocks["bk"], s)
+    n_q = s // bq
+    q_bytes = b * h * s * hd * dtype_bytes
+    # the pipeline fetches one K and one V block per (head, q-block, kv-block)
+    kv_stream = 2 * b * h * n_q * s * hd * dtype_bytes
+    kv_ideal = 2 * b * kv * s * hd * dtype_bytes
+    out = b * h * s * hd * dtype_bytes
+    # causal masking skips ~half the score blocks' useful work
+    mac_frac = 0.5 + 0.5 / n_q if causal else 1.0
+    flops = 4.0 * b * h * s * s * hd * mac_frac
+    vmem = (2 * dtype_bytes * (bq * hd + 2 * bk * hd)    # q + k + v tiles
+            + 2 * dtype_bytes * bq * hd                  # out tile
+            + 4 * (2 * bq + bq * hd))                    # m, l, acc scratch
+    return pp.Traffic(
+        flops=flops,
+        hbm_bytes=float(q_bytes + kv_stream + out),
+        ideal_bytes=float(q_bytes + kv_ideal + out),
+        grid_steps=b * h * n_q * (s // bk),
+        vmem_bytes=vmem,
+        transcendentals=float(b * h * s * (s // bk)),    # exp per row per step
+    )
+
+
+def tune_space(shapes: dict):
+    s = shapes["s"]
+    for bq in pp.block_candidates(s, align=pp.mxu_align(s), cap=6):
+        for bk in pp.block_candidates(s, align=pp.mxu_align(s), cap=6):
+            yield {"bq": bq, "bk": bk}
+
+
+def _defaults(shapes: dict) -> dict:
+    return {"bq": pp.snap_block(shapes["s"], 512),
+            "bk": pp.snap_block(shapes["s"], 512)}
+
+
+pp.register(pp.KernelDef(
+    name="flash_attention", traffic=traffic, tune_space=tune_space,
+    default_blocks=_defaults))
 
 
 def hbm_traffic_bytes(b, h, kv, s, hd, dtype_bytes: int = 2) -> dict:

@@ -1,10 +1,13 @@
 """Blocked MXU matmul — the paper's `matmul` kernel, TPU-native.
 
 MemPool's matmul gives each core a 4x4 output tile in registers (8 loads per
-16 MACs) to maximize compute intensity. The TPU translation: each grid cell
-owns a (bm, bn) output tile held in VMEM scratch across the K loop (the
-"register tile"), streaming (bm, bk) / (bk, bn) operand tiles from HBM
-(the "remote banks") — identical locality story, MXU-aligned block shapes.
+16 MACs) to maximize compute intensity. The TPU translation on the shared
+tile-pipeline layer: each grid cell owns a (bm, bn) output tile held in VMEM
+scratch across the K loop (the "register tile"), streaming (bm, bk) /
+(bk, bn) operand tiles from HBM (the "remote banks") — identical locality
+story, MXU-aligned block shapes. This is the kernel where the autotuner's
+locality term matters most: A is re-streamed N/bn times and B M/bm times, so
+bigger output tiles raise p_local exactly like MemPool's register blocking.
 """
 
 from __future__ import annotations
@@ -15,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from . import pipeline as pp
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
@@ -32,28 +37,79 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def matmul(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
-           bk: int = 256, interpret: bool = False) -> jax.Array:
+def build_pipeline(m: int, n: int, k: int, dtype, *, bm: int | None = None,
+                   bn: int | None = None, bk: int | None = None,
+                   dtype_bytes: int = 4) -> pp.KernelPipeline:
+    bm = pp.resolve_block(m, bm, default=256)
+    bn = pp.resolve_block(n, bn, default=256)
+    bk = pp.resolve_block(k, bk, default=256)
+    n_k = k // bk
+    return pp.KernelPipeline(
+        name="matmul",
+        body=functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(pp.GridAxis("m", m // bm, "parallel"),
+              pp.GridAxis("n", n // bn, "parallel"),
+              pp.GridAxis("k", n_k, "arbitrary")),
+        in_tiles=[
+            pp.TileSpec((bm, bk), lambda i, j, s: (i, s)),
+            pp.TileSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_tiles=pp.TileSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), dtype),
+        scratch=[pltpu.VMEM((bm, bn), jnp.float32)],
+        cost=traffic({"m": m, "n": n, "k": k},
+                     {"bm": bm, "bn": bn, "bk": bk}, dtype_bytes),
+    )
+
+
+def matmul(a: jax.Array, b: jax.Array, *, bm: int | None = None,
+           bn: int | None = None, bk: int | None = None,
+           interpret: bool = False) -> jax.Array:
     """a: (M, K) @ b: (K, N); M, N, K multiples of the block sizes."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
-        f"({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})"
-    n_k = k // bk
-    kernel = functools.partial(_matmul_kernel, n_k=n_k)
-    return pl.pallas_call(
-        kernel,
-        grid=(m // bm, n // bn, n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
-            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(a, b)
+    pipe = build_pipeline(m, n, k, a.dtype, bm=bm, bn=bn, bk=bk,
+                          dtype_bytes=a.dtype.itemsize)
+    return pipe(a, b, interpret=interpret)
+
+
+# -- pipeline-layer contract --------------------------------------------------
+
+def traffic(shapes: dict, blocks: dict, dtype_bytes: int = 4) -> pp.Traffic:
+    m, n, k = shapes["m"], shapes["n"], shapes["k"]
+    bm = min(blocks["bm"], m)
+    bn = min(blocks["bn"], n)
+    bk = min(blocks["bk"], k)
+    # A streamed once per N-block column, B once per M-block row
+    streamed = dtype_bytes * (m * k * (n // bn) + k * n * (m // bm) + m * n)
+    ideal = dtype_bytes * (m * k + k * n + m * n)
+    vmem = (2 * dtype_bytes * (bm * bk + bk * bn)   # double-buffered operands
+            + 2 * dtype_bytes * bm * bn             # output tile
+            + 4 * bm * bn)                          # f32 accumulator scratch
+    return pp.Traffic(
+        flops=2.0 * m * n * k,
+        hbm_bytes=float(streamed),
+        ideal_bytes=float(ideal),
+        grid_steps=(m // bm) * (n // bn) * (k // bk),
+        vmem_bytes=vmem,
+    )
+
+
+def tune_space(shapes: dict):
+    m, n, k = shapes["m"], shapes["n"], shapes["k"]
+    for bm in pp.block_candidates(m, align=pp.mxu_align(m), cap=6):
+        for bn in pp.block_candidates(n, align=pp.mxu_align(n), cap=6):
+            for bk in pp.block_candidates(k, align=pp.mxu_align(k), cap=6):
+                yield {"bm": bm, "bn": bn, "bk": bk}
+
+
+def _defaults(shapes: dict) -> dict:
+    return {"bm": pp.snap_block(shapes["m"], 256),
+            "bn": pp.snap_block(shapes["n"], 256),
+            "bk": pp.snap_block(shapes["k"], 256)}
+
+
+pp.register(pp.KernelDef(
+    name="matmul", traffic=traffic, tune_space=tune_space,
+    default_blocks=_defaults))

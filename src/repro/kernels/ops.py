@@ -3,6 +3,11 @@
 Dispatch: real `pl.pallas_call` lowering on TPU; `interpret=True` (kernel
 body executed op-by-op on CPU) everywhere else — numerics identical, which
 is what the allclose tests against ref.py verify.
+
+Every wrapper takes its block sizes as static kwargs (defaults match the
+kernel modules); `tuned_call` routes through the pipeline-layer autotuner
+(kernels/pipeline.py) + the configs registry, so callers get the
+model-scored blocking for their exact shapes with one call.
 """
 
 from __future__ import annotations
@@ -17,6 +22,7 @@ from . import dct8x8 as _dct8x8
 from . import dotp as _dotp
 from . import flash_attention as _fa
 from . import matmul as _matmul
+from . import pipeline as _pipeline
 from . import rmsnorm as _rmsnorm
 
 
@@ -25,37 +31,104 @@ def _interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
-def matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 256):
+def matmul(a, b, *, bm: int | None = None, bn: int | None = None,
+           bk: int | None = None):
     return _matmul.matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=_interpret())
 
 
-@jax.jit
-def axpy(alpha, x, y):
-    return _axpy.axpy(alpha, x, y, interpret=_interpret())
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def axpy(alpha, x, y, *, block_rows: int | None = None):
+    return _axpy.axpy(alpha, x, y, block_rows=block_rows,
+                      interpret=_interpret())
 
 
-@jax.jit
-def dotp(x, y):
-    return _dotp.dotp(x, y, interpret=_interpret())
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def dotp(x, y, *, block_rows: int | None = None):
+    return _dotp.dotp(x, y, block_rows=block_rows, interpret=_interpret())
 
 
-@jax.jit
-def conv2d_3x3(x, w):
-    return _conv2d.conv2d_3x3(x, w, interpret=_interpret())
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def conv2d_3x3(x, w, *, block_rows: int | None = None):
+    return _conv2d.conv2d_3x3(x, w, block_rows=block_rows,
+                              interpret=_interpret())
 
 
-@jax.jit
-def dct8x8(blocks):
-    return _dct8x8.dct8x8(blocks, interpret=_interpret())
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def dct8x8(blocks, *, block_n: int | None = None):
+    return _dct8x8.dct8x8(blocks, block_n=block_n, interpret=_interpret())
 
 
-@jax.jit
-def rmsnorm(x, scale):
-    return _rmsnorm.rmsnorm(x, scale, interpret=_interpret())
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def rmsnorm(x, scale, *, block_rows: int | None = None):
+    return _rmsnorm.rmsnorm(x, scale, block_rows=block_rows,
+                            interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
-def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
-                    bk: int = 512):
+def flash_attention(q, k, v, *, causal: bool = True, bq: int | None = None,
+                    bk: int | None = None):
     return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
                                interpret=_interpret())
+
+
+# ----------------------------------------------------------------------------
+# Tuned dispatch
+# ----------------------------------------------------------------------------
+
+_WRAPPERS = {
+    "axpy": axpy, "dotp": dotp, "matmul": matmul, "conv2d": conv2d_3x3,
+    "dct8x8": dct8x8, "rmsnorm": rmsnorm, "flash_attention": flash_attention,
+}
+
+
+def wrapper_for(name: str):
+    """Public name -> jit'd wrapper dispatch (same registry tuned_call uses)."""
+    return _WRAPPERS[name]
+
+
+def kernel_shapes(name: str, *operands) -> dict:
+    """The pipeline-layer shape dict for a kernel's runtime operands.
+
+    Operand order matches the public wrapper (alpha/weight operands
+    included), so `kernel_shapes(name, *args)` pairs with
+    `tuned_call(name, *args)`.
+    """
+    if name == "axpy":
+        _, x, _ = operands
+        return {"m": x.shape[0], "n": x.shape[1]}
+    if name == "dotp":
+        x, _ = operands
+        return {"m": x.shape[0], "n": x.shape[1]}
+    if name == "matmul":
+        a, b = operands
+        return {"m": a.shape[0], "k": a.shape[1], "n": b.shape[1]}
+    if name == "conv2d":
+        x, _ = operands
+        return {"h": x.shape[0], "w": x.shape[1]}
+    if name == "dct8x8":
+        (blocks,) = operands
+        return {"n": blocks.shape[0]}
+    if name == "rmsnorm":
+        x, _ = operands
+        return {"m": x.shape[0], "d": x.shape[1]}
+    if name == "flash_attention":
+        q, k, _ = operands
+        b, h, s, hd = q.shape
+        return {"b": b, "h": h, "kv": k.shape[1], "s": s, "hd": hd}
+    raise KeyError(name)
+
+
+# index of the main *streamed* operand per kernel — the one whose dtype
+# sets the VMEM tile footprint (weights/scales/alpha ride along)
+_STREAMED_OPERAND = {
+    "axpy": 1, "dotp": 0, "matmul": 0, "conv2d": 0, "dct8x8": 0,
+    "rmsnorm": 0, "flash_attention": 0,
+}
+
+
+def tuned_call(name: str, *operands, **kwargs):
+    """Run a kernel with autotuned (registry-cached) block sizes."""
+    shapes = kernel_shapes(name, *operands)
+    dtype_bytes = operands[_STREAMED_OPERAND[name]].dtype.itemsize
+    blocks = _pipeline.tuned_blocks(name, shapes, dtype_bytes=dtype_bytes)
+    return _WRAPPERS[name](*operands, **blocks, **kwargs)

@@ -1,0 +1,394 @@
+"""Unified tile-pipeline layer — one memory hierarchy, many kernels.
+
+MemPool's claim is that a single hierarchical fabric (tile -> group ->
+cluster, hybrid local/interleaved addressing, double-buffered DMA) serves
+every kernel. This module is that claim as code for the TPU translation:
+every Pallas kernel in this repo describes itself as
+
+  * a set of `TileSpec`s — block shapes + index maps, i.e. which slice of
+    each operand is resident in VMEM ("the local tile") at each grid step;
+  * a tuple of `GridAxis`es — the iteration space with per-dimension
+    semantics ("parallel" = independent tiles, "arbitrary" = sequential,
+    carrying VMEM scratch across steps — the paper's sequential region);
+  * optional VMEM scratch — the "register tile" held across the sequential
+    axis (matmul accumulator, flash-attention online-softmax state);
+
+and `KernelPipeline` emits the `pl.pallas_call`. Pallas's grid pipeline
+double-buffers every streamed operand block (the DMA of block k+1 rides
+under the compute of block k — paper Fig. 15 / TCDM burst streaming), which
+is why `vmem_bytes()` charges two slots per streamed tile and why the cost
+model overlaps the memory and compute terms with `max()`.
+
+The autotuner (`autotune`) picks block sizes by scoring each candidate
+against the repo's existing cost models: `launch/roofline.kernel_roofline`
+for the compute/memory terms and `core/interconnect.TopologyModel` for the
+locality penalty — candidates that re-stream operands (low reuse = low
+p_local in MemPool terms) pay the congested-fabric latency blow-up of the
+paper's Fig. 5 model. Winning records are registered in
+`configs/registry.KERNEL_TUNES` so launchers and benchmarks share them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterator, Sequence
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import mesh as hw
+from repro.core.interconnect import TOP_H, TopologyModel
+from repro.launch.roofline import kernel_roofline
+
+# ----------------------------------------------------------------------------
+# Tile / grid description
+# ----------------------------------------------------------------------------
+
+_MEMORY_SPACES = {"smem": pltpu.SMEM}
+
+# renamed upstream (TPUCompilerParams -> CompilerParams); accept both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSpec:
+    """One operand's residency: the VMEM block and where it comes from.
+
+    `block` is the tile held on-chip per grid step (the paper's per-core
+    working set); `index_map` routes grid coordinates to block coordinates —
+    including neighbor/halo routing (conv2d) and head-group folding
+    (flash-attention GQA), the analogue of the hybrid addressing scheme's
+    scrambler. `memory_space="smem"` marks scalar operands.
+    """
+
+    block: tuple[int, ...]
+    index_map: Callable[..., tuple] | None = None
+    memory_space: str | None = None           # None -> pipelined VMEM
+
+    def block_spec(self) -> pl.BlockSpec:
+        if self.memory_space is None:
+            return pl.BlockSpec(self.block, self.index_map)
+        return pl.BlockSpec(self.block, self.index_map,
+                            memory_space=_MEMORY_SPACES[self.memory_space])
+
+    def bytes_per_step(self, dtype_bytes: int) -> int:
+        return math.prod(self.block) * dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class GridAxis:
+    """One grid dimension with its MemPool-flavoured semantics.
+
+    "parallel"  — tiles are independent (cores race ahead);
+    "arbitrary" — sequential on TPU: VMEM scratch carries across steps,
+                  the paper's sequential region owned by one tile.
+    """
+
+    name: str
+    size: int
+    semantics: str = "parallel"
+
+    def __post_init__(self):
+        assert self.semantics in ("parallel", "arbitrary"), self.semantics
+        assert self.size >= 1, (self.name, self.size)
+
+
+class KernelPipeline:
+    """Builds one `pl.pallas_call` from tiles + grid + register-tile scratch."""
+
+    def __init__(self, name: str, body: Callable, grid: Sequence[GridAxis],
+                 in_tiles: Sequence[TileSpec],
+                 out_tiles: TileSpec | Sequence[TileSpec],
+                 out_shape: Any, scratch: Sequence[Any] = (),
+                 cost: "Traffic | None" = None):
+        self.name = name
+        self.body = body
+        self.grid = tuple(grid)
+        self.in_tiles = tuple(in_tiles)
+        self.out_tiles = (tuple(out_tiles) if isinstance(out_tiles, (tuple, list))
+                          else (out_tiles,))
+        self.multi_out = isinstance(out_tiles, (tuple, list))
+        self.out_shape = out_shape
+        self.scratch = tuple(scratch)
+        self.cost = cost
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def grid_steps(self) -> int:
+        return math.prod(a.size for a in self.grid)
+
+    def dimension_semantics(self) -> tuple[str, ...]:
+        return tuple(a.semantics for a in self.grid)
+
+    def vmem_bytes(self, dtype_bytes: int = 4) -> int:
+        """Double-buffered VMEM footprint: 2 slots per streamed tile (the
+        pipeline's in-flight copy of block k+1 next to block k) + scratch.
+
+        Introspection for a *built* pipeline. The autotuner budget-checks the
+        per-kernel `traffic()` formulas instead (pure shape math, no pipeline
+        construction per candidate); those may under-count resident constant
+        tiles deliberately (e.g. conv2d's 3x3 weight is charged once).
+        """
+        tiles = [t for t in (*self.in_tiles, *self.out_tiles)
+                 if t.memory_space is None]
+        streamed = 2 * sum(t.bytes_per_step(dtype_bytes) for t in tiles)
+        scratch = 0
+        for s in self.scratch:
+            shape = getattr(s, "shape", None)
+            dt = getattr(s, "dtype", None)
+            if shape is not None:
+                scratch += math.prod(shape) * (
+                    jax.numpy.dtype(dt).itemsize if dt is not None else 4)
+        return streamed + scratch
+
+    # -- emission ------------------------------------------------------------
+    def pallas_call(self, *, interpret: bool = False) -> Callable:
+        out_specs = tuple(t.block_spec() for t in self.out_tiles)
+        kwargs: dict[str, Any] = {}
+        if self.cost is not None and hasattr(pl, "CostEstimate"):
+            kwargs["cost_estimate"] = pl.CostEstimate(
+                flops=int(self.cost.flops),
+                bytes_accessed=int(self.cost.hbm_bytes),
+                transcendentals=int(self.cost.transcendentals))
+        return pl.pallas_call(
+            self.body,
+            grid=tuple(a.size for a in self.grid),
+            in_specs=[t.block_spec() for t in self.in_tiles],
+            out_specs=out_specs if self.multi_out else out_specs[0],
+            out_shape=self.out_shape,
+            scratch_shapes=list(self.scratch),
+            compiler_params=_COMPILER_PARAMS(
+                dimension_semantics=self.dimension_semantics()),
+            interpret=interpret,
+            **kwargs)
+
+    def __call__(self, *operands, interpret: bool = False):
+        return self.pallas_call(interpret=interpret)(*operands)
+
+
+# ----------------------------------------------------------------------------
+# Traffic / cost model
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Structural traffic of one kernel invocation under a given blocking."""
+
+    flops: float
+    hbm_bytes: float        # streamed under this blocking (re-fetches counted)
+    ideal_bytes: float      # compulsory traffic: every operand/result once
+    grid_steps: int
+    vmem_bytes: int
+    transcendentals: float = 0.0
+
+
+# fixed per-grid-step pipeline bookkeeping (index computation, DMA issue);
+# penalizes degenerate tiny tiles the roofline terms alone would not
+GRID_STEP_SECONDS = 2e-7
+# injected load at which the locality penalty is evaluated (a busy fabric,
+# below the Top_H saturation point — paper Fig. 5 operating point)
+_INJECTED_LOAD = 0.3
+
+
+def locality_factor(traffic: Traffic,
+                    model: TopologyModel | None = None) -> tuple[float, float]:
+    """(latency blow-up >= 1, p_local) for this blocking's reuse behaviour.
+
+    Reuse fraction = compulsory / streamed bytes: every re-streamed byte is
+    a "remote" access in MemPool terms, every reused byte a local-tile hit.
+    The Top_H congestion model turns that into an average-latency ratio
+    versus the perfectly-local schedule.
+    """
+    model = model or TopologyModel(TOP_H)
+    p_local = min(1.0, traffic.ideal_bytes / max(traffic.hbm_bytes, 1.0))
+    base = model.avg_latency(_INJECTED_LOAD, p_local=1.0)
+    factor = model.avg_latency(_INJECTED_LOAD, p_local=p_local) / base
+    return max(factor, 1.0), p_local
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    compute_s: float
+    memory_s: float
+    overhead_s: float
+    locality: float
+    p_local: float
+    total_s: float
+
+
+def score(traffic: Traffic, model: TopologyModel | None = None) -> CostBreakdown:
+    """Modeled seconds for one invocation: double-buffered overlap of the
+    roofline compute/memory terms, memory scaled by the interconnect-model
+    locality penalty, plus per-step pipeline overhead."""
+    r = kernel_roofline(traffic.flops, traffic.hbm_bytes)
+    factor, p_local = locality_factor(traffic, model)
+    memory_s = r["memory_s"] * factor
+    overhead = traffic.grid_steps * GRID_STEP_SECONDS
+    total = max(r["compute_s"], memory_s) + overhead
+    return CostBreakdown(compute_s=r["compute_s"], memory_s=memory_s,
+                         overhead_s=overhead, locality=factor,
+                         p_local=p_local, total_s=total)
+
+
+# ----------------------------------------------------------------------------
+# Kernel registry
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDef:
+    """A kernel's contract with the pipeline layer.
+
+    `traffic(shapes, blocks, dtype_bytes)` and `tune_space(shapes)` are pure
+    shape math — the autotuner never runs the kernel.
+    """
+
+    name: str
+    traffic: Callable[[dict, dict, int], Traffic]
+    tune_space: Callable[[dict], Iterator[dict]]
+    default_blocks: Callable[[dict], dict]
+
+
+KERNELS: dict[str, KernelDef] = {}
+
+
+def register(defn: KernelDef) -> KernelDef:
+    KERNELS[defn.name] = defn
+    return defn
+
+
+def shape_key(shapes: dict, dtype_bytes: int = 4) -> str:
+    # dtype_bytes is part of the key: blocks tuned under a 2-byte VMEM
+    # footprint are not valid for 4-byte operands of the same shape
+    return f"b{dtype_bytes}_" + "_".join(
+        f"{k}{shapes[k]}" for k in sorted(shapes))
+
+
+def block_candidates(dim: int, *, align: int = 8, cap: int = 8,
+                     max_block: int | None = None) -> list[int]:
+    """Divisors of `dim` that are multiples of `align`, geometrically thinned.
+
+    Falls back to [dim] when nothing aligns (tiny dims) so every kernel
+    always has at least one valid, divisibility-respecting candidate.
+    """
+    cands = [d for d in range(align, dim + 1, align) if dim % d == 0]
+    if not cands:
+        cands = [dim]
+    if max_block is not None:
+        capped = [c for c in cands if c <= max_block]
+        cands = capped or [min(cands)]
+    if len(cands) > cap:
+        idx = sorted({round(i * (len(cands) - 1) / (cap - 1))
+                      for i in range(cap)})
+        cands = [cands[i] for i in idx]
+    return cands
+
+
+def snap_block(dim: int, block: int) -> int:
+    """Largest divisor of `dim` that is <= `block` (>= 1)."""
+    block = max(1, min(block, dim))
+    while dim % block:
+        block -= 1
+    return block
+
+
+def resolve_block(dim: int, block: int | None, default: int) -> int:
+    """Resolve one block size against its dimension.
+
+    `None` (the wrapper default) snaps `default` to the largest divisor, so
+    any operand shape works out of the box. An explicit value is capped at
+    the dimension itself (a block can't exceed the array; the cap is the
+    whole-dim block, exactly divisible) and must then divide — silently
+    substituting some *smaller* blocking for one the caller asked for would
+    invalidate their benchmark, so non-divisors raise instead.
+    """
+    if block is None:
+        return snap_block(dim, default)
+    block = max(1, min(block, dim))
+    if dim % block:
+        raise ValueError(
+            f"block size {block} does not divide dimension {dim}; pass a "
+            f"divisor or omit it for the snapped default")
+    return block
+
+
+def mxu_align(dim: int) -> int:
+    """MXU-facing dims prefer 128-aligned tiles; fall back for small dims."""
+    return hw.MXU_TILE if dim % hw.MXU_TILE == 0 else 8
+
+
+# ----------------------------------------------------------------------------
+# Autotuner
+# ----------------------------------------------------------------------------
+
+# leave headroom under the physical VMEM for the compiler's own buffers
+VMEM_BUDGET_BYTES = int(hw.VMEM_BYTES * 0.75)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    kernel: str
+    shapes: tuple[tuple[str, int], ...]
+    blocks: dict[str, int]
+    cost: CostBreakdown
+    default_blocks: dict[str, int]
+    default_cost: CostBreakdown
+
+    @property
+    def modeled_speedup(self) -> float:
+        return self.default_cost.total_s / max(self.cost.total_s, 1e-30)
+
+
+def autotune(kernel: str, shapes: dict, *, dtype_bytes: int = 4,
+             vmem_budget: int = VMEM_BUDGET_BYTES,
+             register_record: bool = True) -> TuneResult:
+    """Pick the modeled-fastest valid blocking for `kernel` at `shapes`.
+
+    Every candidate from the kernel's tune space is checked for divisibility
+    (the space only emits divisors) and the double-buffered VMEM budget,
+    then scored with `score`. The winner is recorded in
+    `configs.registry.KERNEL_TUNES` keyed on (kernel, shape_key).
+    """
+    defn = KERNELS[kernel]
+    best_blocks: dict[str, int] | None = None
+    best_cost: CostBreakdown | None = None
+    for blocks in defn.tune_space(shapes):
+        t = defn.traffic(shapes, blocks, dtype_bytes)
+        if t.vmem_bytes > vmem_budget:
+            continue
+        c = score(t)
+        if best_cost is None or c.total_s < best_cost.total_s:
+            best_blocks, best_cost = dict(blocks), c
+    if best_blocks is None:        # budget excluded everything: take smallest
+        blocks = next(iter(defn.tune_space(shapes)))
+        best_blocks = dict(blocks)
+        best_cost = score(defn.traffic(shapes, blocks, dtype_bytes))
+    default = defn.default_blocks(shapes)
+    default_cost = score(defn.traffic(shapes, default, dtype_bytes))
+    result = TuneResult(kernel=kernel,
+                        shapes=tuple(sorted(shapes.items())),
+                        blocks=best_blocks, cost=best_cost,
+                        default_blocks=dict(default),
+                        default_cost=default_cost)
+    if register_record:
+        from repro.configs import registry
+        registry.register_kernel_tune(registry.KernelTuneRecord(
+            kernel=kernel, shape_key=shape_key(shapes, dtype_bytes),
+            blocks=tuple(sorted(best_blocks.items())),
+            modeled_seconds=best_cost.total_s,
+            default_blocks=tuple(sorted(default.items())),
+            default_modeled_seconds=default_cost.total_s))
+    return result
+
+
+def tuned_blocks(kernel: str, shapes: dict, *, dtype_bytes: int = 4) -> dict:
+    """Registry-cached tuned blocks for (kernel, shapes, dtype); tunes on miss."""
+    from repro.configs import registry
+    rec = registry.get_kernel_tune(kernel, shape_key(shapes, dtype_bytes))
+    if rec is None:
+        return dict(autotune(kernel, shapes, dtype_bytes=dtype_bytes).blocks)
+    return dict(rec.blocks)

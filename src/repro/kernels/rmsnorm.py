@@ -1,11 +1,18 @@
-"""Fused RMSNorm — one HBM round-trip instead of three (norm hot path)."""
+"""Fused RMSNorm — one HBM round-trip instead of three (norm hot path).
+
+On the tile-pipeline layer: row blocks stream through VMEM, the scale vector
+stays resident (constant index_map), and the mean/rsqrt/scale fusion runs on
+the VPU per tile.
+"""
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import pipeline as pp
 
 
 def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
@@ -15,23 +22,54 @@ def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
                   * (1.0 + s_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
 
 
-def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
-            block_rows: int = 256, interpret: bool = False) -> jax.Array:
-    """x: (M, D); scale: (D,)."""
-    import functools
-    m, d = x.shape
-    br = min(block_rows, m)
-    assert m % br == 0
-    return pl.pallas_call(
-        functools.partial(_rmsnorm_kernel, eps=eps),
-        grid=(m // br,),
-        in_specs=[
-            pl.BlockSpec((br, d), lambda i: (i, 0)),
-            pl.BlockSpec((d,), lambda i: (0,)),
+def build_pipeline(m: int, d: int, dtype, *, eps: float = 1e-6,
+                   block_rows: int | None = None,
+                   dtype_bytes: int = 4) -> pp.KernelPipeline:
+    br = pp.resolve_block(m, block_rows, default=256)
+    return pp.KernelPipeline(
+        name="rmsnorm",
+        body=functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(pp.GridAxis("rows", m // br, "parallel"),),
+        in_tiles=[
+            pp.TileSpec((br, d), lambda i: (i, 0)),
+            pp.TileSpec((d,), lambda i: (0,)),
         ],
-        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)),
-        interpret=interpret,
-    )(x, scale)
+        out_tiles=pp.TileSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), dtype),
+        cost=traffic({"m": m, "d": d}, {"block_rows": br}, dtype_bytes),
+    )
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+            block_rows: int | None = None, interpret: bool = False) -> jax.Array:
+    """x: (M, D); scale: (D,)."""
+    m, d = x.shape
+    pipe = build_pipeline(m, d, x.dtype, eps=eps, block_rows=block_rows,
+                          dtype_bytes=x.dtype.itemsize)
+    return pipe(x, scale, interpret=interpret)
+
+
+# -- pipeline-layer contract --------------------------------------------------
+
+def traffic(shapes: dict, blocks: dict, dtype_bytes: int = 4) -> pp.Traffic:
+    m, d = shapes["m"], shapes["d"]
+    br = min(blocks["block_rows"], m)
+    moved = 2 * m * d * dtype_bytes + d * 4
+    return pp.Traffic(
+        flops=4.0 * m * d,
+        hbm_bytes=float(moved),
+        ideal_bytes=float(moved),
+        grid_steps=m // br,
+        vmem_bytes=2 * 2 * br * d * dtype_bytes + d * 4,
+        transcendentals=float(m),               # one rsqrt per row
+    )
+
+
+def tune_space(shapes: dict):
+    for br in pp.block_candidates(shapes["m"], align=8):
+        yield {"block_rows": br}
+
+
+pp.register(pp.KernelDef(
+    name="rmsnorm", traffic=traffic, tune_space=tune_space,
+    default_blocks=lambda shapes: {"block_rows": pp.snap_block(shapes["m"], 256)}))

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, ARCHS, cell_supported, get, input_specs
-from repro.core import addressing, hlo_cost, locality
+from repro.core import addressing, compat, hlo_cost, locality
 from repro.core import mesh as hw
 from repro.launch.mesh import make_production_mesh
 from repro.models import steps
@@ -183,7 +183,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                                                  fsdp_gather=fsdp_gather)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=donate).lower(*args)
         t_lower = time.time() - t0

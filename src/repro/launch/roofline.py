@@ -1,4 +1,10 @@
-"""Roofline tables from the dry-run JSONs -> markdown for EXPERIMENTS.md.
+"""Roofline model + tables from the dry-run JSONs -> markdown for EXPERIMENTS.md.
+
+Two roles:
+  * `kernel_roofline` — the per-kernel compute/memory roofline terms on the
+    v5e constants; the scoring primitive for the kernel autotuner
+    (kernels/pipeline.py) and the Table-1 benchmark.
+  * the table generators below, which render the dry-run JSONs.
 
 Usage: PYTHONPATH=src python -m repro.launch.roofline [--update-experiments]
 """
@@ -10,6 +16,25 @@ import json
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def kernel_roofline(flops: float, hbm_bytes: float) -> dict:
+    """Roofline terms (seconds) of one kernel invocation on a single chip.
+
+    Same term definitions as the dry-run records' `roofline` block, applied
+    to a kernel's own flop/traffic counts instead of a whole train step.
+    """
+    from repro.core import mesh as hw
+    compute_s = flops / hw.PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / hw.HBM_BW
+    intensity = flops / max(hbm_bytes, 1.0)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "dominant": "compute_s" if compute_s >= memory_s else "memory_s",
+        "intensity": intensity,
+        "roof_flops": min(hw.PEAK_FLOPS_BF16, intensity * hw.HBM_BW),
+    }
 
 
 def load(mesh: str = "single", variants: bool = False) -> list[dict]:

@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get
-from repro.core import addressing
+from repro.core import addressing, compat
 from repro.data import Distributor, Splitter, SyntheticLMStream
 from repro.data.pipeline import BatchSpec
 from repro.models import steps
@@ -40,8 +40,7 @@ def main():
     cfg = get(args.arch + ("-smoke" if args.smoke else ""))
     n_dev = jax.device_count()
     data = args.data_axis or n_dev
-    mesh = jax.make_mesh((data, n_dev // data), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((data, n_dev // data), ("data", "model"))
     rules = addressing.default_rules(mesh, overrides=cfg.rules_overrides)
 
     state = steps.init_train_state(cfg, jax.random.PRNGKey(0),
@@ -66,7 +65,7 @@ def main():
             yield dist.materialize(stream, step, batch_sh)
             step += 1
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         train_step = jax.jit(steps.make_train_step(cfg), donate_argnums=0)
         loop = TrainLoop(
             TrainLoopConfig(total_steps=args.steps,

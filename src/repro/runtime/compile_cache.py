@@ -16,6 +16,8 @@ from typing import Any, Callable
 
 import jax
 
+from repro.core import compat
+
 
 def _fingerprint(*parts: Any) -> str:
     s = json.dumps([str(p) for p in parts], sort_keys=True)
@@ -45,7 +47,7 @@ class CompileCache:
                else mesh.shape)
 
         def build():
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 return jax.jit(fn, in_shardings=in_shardings,
                                out_shardings=out_shardings,
                                donate_argnums=donate).lower(*args_sds).compile()

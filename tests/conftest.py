@@ -7,6 +7,12 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
+# make sibling test helpers (hypothesis_fallback) importable regardless of
+# pytest import mode
+TESTS = Path(__file__).resolve().parent
+if str(TESTS) not in sys.path:
+    sys.path.insert(0, str(TESTS))
+
 # NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device; only launch/dryrun.py forces 512 (and the
 # dry-run CI test spawns a subprocess with REPRO_DRYRUN_DEVICES=8).

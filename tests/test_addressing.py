@@ -3,9 +3,14 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # bare env without the [test] extra
+    from hypothesis_fallback import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core.addressing import AddressMap, AxisRules, default_rules
 
 AM = AddressMap(tile_bits=6, bank_bits=4, seq_rows_bits=4)   # paper config
@@ -60,7 +65,7 @@ def test_scramble_outside_region_identity():
 def amesh(*shape_axes):
     shape = tuple(n for n, _ in shape_axes)
     axes = tuple(a for _, a in shape_axes)
-    return jax.sharding.AbstractMesh(shape, axes)
+    return compat.abstract_mesh(shape, axes)
 
 
 @pytest.fixture(scope="module")

@@ -2,12 +2,14 @@
 
 import jax
 import numpy as np
+import pytest
 
 from repro import api
+from repro.core import compat
 
 
 def test_plan_regions():
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = compat.abstract_mesh((2, 2), ("data", "model"))
     p = api.plan("qwen3-14b", mesh)
     ffn = next(v for k, v in p.items() if k.endswith("w_gate"))
     assert ffn["region"] == "INTERLEAVED"
@@ -16,6 +18,7 @@ def test_plan_regions():
     assert len(p) > 10
 
 
+@pytest.mark.slow
 def test_train_and_serve_one_call(tmp_path):
     report = api.train("xlstm-125m", steps_=4, batch=2, seq=16,
                        checkpoint_dir=str(tmp_path))

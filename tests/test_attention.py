@@ -29,6 +29,7 @@ def test_schedule_forward(qkv, schedule, window):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("schedule,window", [
     ("masked", None), ("folded", None), ("banded", 24),
 ])

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
+from repro.core import compat
 from repro.configs import get
 from repro.models import steps
 from repro.runtime import TrainLoop, TrainLoopConfig, CompileCache
@@ -56,8 +57,7 @@ def test_elastic_restore_resharding(tmp_path):
     mgr = CheckpointManager(tmp_path, async_save=False)
     state = small_state()
     mgr.save(3, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda _: jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec()), state)
@@ -65,6 +65,7 @@ def test_elastic_restore_resharding(tmp_path):
     assert restored["params"]["w"].sharding.mesh.shape["data"] == 1
 
 
+@pytest.mark.slow
 def test_train_loop_end_to_end_with_resume(tmp_path):
     cfg = get("xlstm-125m-smoke")
     state = steps.init_train_state(cfg, jax.random.PRNGKey(0), max_seq=16)

@@ -5,6 +5,7 @@ import time
 import jax
 import numpy as np
 
+from repro.core import compat
 from repro.data import DoubleBufferedFeed, Distributor, Splitter, SyntheticLMStream
 from repro.data.pipeline import BatchSpec
 
@@ -27,8 +28,7 @@ def test_labels_are_shifted_tokens():
 
 
 def test_splitter_slices_cover_batch():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sp = Splitter(mesh, ("pod", "data"))
     slices = sp.slices(8)
     assert slices[0] == (0, 8)
@@ -49,8 +49,7 @@ def test_slice_independence():
 def test_distributor_materializes_sharded():
     spec = BatchSpec(global_batch=4, seq_len=8, vocab=50)
     stream = SyntheticLMStream(spec)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
     dist = Distributor(mesh, Splitter(mesh, ("data",)))
     batch = dist.materialize(stream, 0, sh)

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # bare env without the [test] extra
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 

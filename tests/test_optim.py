@@ -89,10 +89,9 @@ def test_error_feedback_unbiased_over_time():
 
 def test_compressed_psum_under_shard_map():
     from functools import partial
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("data",))
     grads = {"w": jnp.ones((4,), jnp.float32)}
 
     @partial(shard_map, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),

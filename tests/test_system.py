@@ -4,14 +4,17 @@ composed exactly as examples/ and the launcher wire it together."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get
+from repro.core import compat
 from repro.data import Distributor, Splitter, SyntheticLMStream
 from repro.data.pipeline import BatchSpec
 from repro.models import steps
 from repro.runtime import ServeLoop, TrainLoop, TrainLoopConfig
 
 
+@pytest.mark.slow
 def test_train_then_serve_roundtrip(tmp_path):
     """Train a smoke model a few steps, checkpoint, reload, decode."""
     cfg = get("qwen3-14b-smoke")
@@ -22,8 +25,7 @@ def test_train_then_serve_roundtrip(tmp_path):
 
     spec = BatchSpec(global_batch=2, seq_len=S, vocab=cfg.vocab)
     stream = SyntheticLMStream(spec, seed=3)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     dist = Distributor(mesh, Splitter(mesh, ("data",)))
 
@@ -53,6 +55,7 @@ def test_train_then_serve_roundtrip(tmp_path):
     assert stats["decode_steps"] == 5
 
 
+@pytest.mark.slow
 def test_decode_consistent_with_prefill():
     """Greedy next-token from decode-with-cache must match prefill argmax
     when the cache was filled by decoding the same prompt."""
@@ -79,7 +82,7 @@ def test_region_plan_places_weights_and_state():
     """The hybrid addressing plan: weights INTERLEAVED (data x model),
     optimizer/activations SEQUENTIAL (batch axes), norms replicated."""
     from repro.core import addressing
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = compat.abstract_mesh((2, 2), ("data", "model"))
     rules = addressing.default_rules(mesh)
     # an FFN weight: embed x ffn -> (data, model)
     spec = rules.spec_for(("embed", "ffn"), (64, 64), mesh)
