@@ -3,6 +3,12 @@
 The paper splits core activity into compute / control / stalls. Our roofline
 split per dry-run cell: compute term share, memory term share, collective
 term share (reads results/dryrun/*.json written by launch/dryrun.py).
+
+Second section: the fused-path traffic breakdown — modeled HBM bytes of
+one transformer block through the fused producer–consumer kernels
+(kernels/fused.py) vs the unfused composition of isolated kernels, per
+representative arch. This is where the paper's "intermediates live in
+shared L1" claim shows up as a bytes-moved number.
 """
 
 from __future__ import annotations
@@ -12,25 +18,51 @@ from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 
+# (arch, b, s) cells for the fused-block traffic model; smoke shrinks them
+_FUSED_CELLS = [("yi-34b", 1, 4096), ("qwen3-14b", 1, 4096),
+                ("mixtral-8x7b", 1, 4096)]
 
-def main() -> list[str]:
+
+def fused_block_rows(smoke: bool = False) -> list[str]:
+    from repro.configs import registry
+    from repro.kernels import fused
+
+    lines = []
+    for arch, b, s in _FUSED_CELLS[:1] if smoke else _FUSED_CELLS:
+        cfg = registry.get(arch)
+        if smoke:
+            cfg, s = registry.get(arch + "-smoke"), 128
+        t = fused.transformer_block_traffic(
+            b, s, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            cfg.d_ff, attn_chunk=min(cfg.attn_chunk, s))
+        lines.append(
+            f"fig14_fused/{cfg.name}/b{b}s{s},0,"
+            f"unfused_GB={t['unfused_bytes'] / 1e9:.3f};"
+            f"fused_GB={t['fused_bytes'] / 1e9:.3f};"
+            f"reduction={t['reduction']:.2f}x")
+    return lines
+
+
+def main(smoke: bool = False) -> list[str]:
     lines = []
     if not RESULTS.exists():
-        return ["fig14/breakdown,0,skipped(no dry-run results)"]
-    for p in sorted(RESULTS.glob("*__single.json")):
-        d = json.loads(p.read_text())
-        if d.get("status") != "ok" or d.get("variant"):
-            continue
-        r = d["roofline"]
-        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
-        if total <= 0:
-            continue
-        lines.append(
-            f"fig14/{d['arch']}/{d['shape']},0,"
-            f"compute={r['compute_s'] / total:.3f};"
-            f"memory={r['memory_s'] / total:.3f};"
-            f"collective={r['collective_s'] / total:.3f};"
-            f"dominant={r['dominant'].replace('_s', '')}")
+        lines.append("fig14/breakdown,0,skipped(no dry-run results)")
+    else:
+        for p in sorted(RESULTS.glob("*__single.json")):
+            d = json.loads(p.read_text())
+            if d.get("status") != "ok" or d.get("variant"):
+                continue
+            r = d["roofline"]
+            total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+            if total <= 0:
+                continue
+            lines.append(
+                f"fig14/{d['arch']}/{d['shape']},0,"
+                f"compute={r['compute_s'] / total:.3f};"
+                f"memory={r['memory_s'] / total:.3f};"
+                f"collective={r['collective_s'] / total:.3f};"
+                f"dominant={r['dominant'].replace('_s', '')}")
+    lines.extend(fused_block_rows(smoke))
     return lines
 
 

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mesh as hw
-from repro.kernels import ops, pipeline as pp
+from repro.kernels import fused, ops, pipeline as pp
 
 
 def timeit(fn, *args, reps: int = 3) -> float:
@@ -148,6 +148,66 @@ def tuned_rows(smoke: bool = False) -> list[dict]:
     return out
 
 
+# ----------------------------------------------------------------------------
+# fused vs unfused composition (kernels/fused.py)
+# ----------------------------------------------------------------------------
+
+def _fused_cases(smoke: bool) -> dict[str, tuple]:
+    """(fused_fn, unfused_fn, fused_kernel_name, shapes) per fused kernel."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 8)
+    if smoke:
+        m, k, n, s, hd, h, kv, dm = 128, 64, 128, 128, 32, 4, 2, 64
+    else:
+        m, k, n, s, hd, h, kv, dm = 512, 512, 512, 512, 64, 4, 2, 256
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    sc = jax.random.normal(ks[1], (k,), jnp.float32) * 0.1
+    w = jax.random.normal(ks[2], (k, n), jnp.float32)
+    bias = jax.random.normal(ks[3], (n,), jnp.float32)
+    res = jax.random.normal(ks[4], (m, n), jnp.float32)
+    q = jax.random.normal(ks[5], (1, h, s, hd), jnp.float32)
+    kk = jax.random.normal(ks[6], (1, kv, s, hd), jnp.float32)
+    v = jax.random.normal(ks[7], (1, kv, s, hd), jnp.float32)
+    wo = jax.random.normal(ks[0], (h, hd, dm), jnp.float32) * 0.1
+    return {
+        "rmsnorm_matmul": (
+            lambda: ops.rmsnorm_matmul(x, sc, w),
+            lambda: ops.matmul(ops.rmsnorm(x, sc), w),
+            {"m": m, "k": k, "n": n}),
+        "matmul_bias_act": (
+            lambda: ops.matmul_bias_act(x, w, bias, act="gelu"),
+            lambda: jax.nn.gelu(ops.matmul(x, w) + bias),
+            {"m": m, "k": k, "n": n}),
+        "matmul_residual_add": (
+            lambda: ops.matmul_residual_add(x, w, res),
+            lambda: ops.matmul(x, w) + res,
+            {"m": m, "k": k, "n": n}),
+        "flash_attention_proj": (
+            lambda: ops.flash_attention_proj(q, kk, v, wo),
+            lambda: jnp.einsum(
+                "bhsk,hkd->bsd",
+                ops.flash_attention(q, kk, v), wo),
+            {"b": 1, "h": h, "kv": kv, "s": s, "hd": hd, "dm": dm}),
+    }
+
+
+def fused_rows(smoke: bool = False) -> list[dict]:
+    reps = 1 if smoke else 3
+    out = []
+    for name, (fused_fn, unfused_fn, shapes) in _fused_cases(smoke).items():
+        t_fused = timeit(fused_fn, reps=reps)
+        t_unfused = timeit(unfused_fn, reps=reps)
+        model = fused.fused_vs_unfused(name, shapes)
+        out.append({
+            "name": f"table1_fused/{name}",
+            "us_fused": t_fused * 1e6,
+            "us_unfused": t_unfused * 1e6,
+            "fused_bytes": model["fused_bytes"],
+            "unfused_bytes": model["unfused_bytes"],
+            "bytes_reduction": model["reduction"],
+        })
+    return out
+
+
 def main(smoke: bool = False) -> list[str]:
     lines = []
     for r in rows(smoke):
@@ -162,6 +222,13 @@ def main(smoke: bool = False) -> list[str]:
             f"default_us={r['us_default']:.1f};blocks={blocks};"
             f"modeled_speedup={r['modeled_speedup']:.2f};"
             f"p_local={r['p_local']:.3f}")
+    for r in fused_rows(smoke):
+        lines.append(
+            f"{r['name']},{r['us_fused']:.1f},"
+            f"unfused_us={r['us_unfused']:.1f};"
+            f"fused_GB={r['fused_bytes'] / 1e9:.4f};"
+            f"unfused_GB={r['unfused_bytes'] / 1e9:.4f};"
+            f"bytes_reduction={r['bytes_reduction']:.2f}")
     return lines
 
 

@@ -10,6 +10,13 @@ Flags:
   --json PATH   also write the rows as structured JSON (uploaded as a CI
                 artifact)
   --only NAMES  comma-separated subset of sections
+  --repeat N    run each section N times and report the per-row median
+                us_per_call (derived fields from the first run)
+
+Whenever the table1 section runs, its rows are also persisted to
+`BENCH_table1.json` at the repo root — the perf-trajectory record the CI
+smoke job refreshes on every run — and a `fused-vs-unfused:` summary line
+is printed for the fused kernel path.
 """
 
 from __future__ import annotations
@@ -17,6 +24,7 @@ from __future__ import annotations
 import argparse
 import inspect
 import json
+import statistics
 import sys
 import time
 import traceback
@@ -56,6 +64,54 @@ def _parse_row(line: str) -> dict:
     return {"name": name, "us_per_call": us_val, "derived": derived}
 
 
+def _median_lines(runs: list[list[str]]) -> list[str]:
+    """Per-row median us_per_call across repeats (first run's derived)."""
+    if len(runs) == 1:
+        return runs[0]
+    by_name: dict[str, list[float]] = {}
+    for run in runs:
+        for line in run:
+            r = _parse_row(line)
+            if r["us_per_call"] is not None:
+                by_name.setdefault(r["name"], []).append(r["us_per_call"])
+    out = []
+    for line in runs[0]:
+        r = _parse_row(line)
+        if r["us_per_call"] is None or r["name"] not in by_name:
+            out.append(line)
+            continue
+        med = statistics.median(by_name[r["name"]])
+        out.append(f"{r['name']},{med:.1f},{r['derived']}")
+    return out
+
+
+def _fused_comparison_line(rows: list[dict]) -> str | None:
+    """One-line fused-vs-unfused summary from the table1_fused rows."""
+    parts = []
+    for r in rows:
+        if not r["name"].startswith("table1_fused/"):
+            continue
+        kv = dict(p.split("=", 1) for p in r["derived"].split(";"))
+        parts.append(
+            f"{r['name'].removeprefix('table1_fused/')}"
+            f" {r['us_per_call']:.0f}us (unfused {float(kv['unfused_us']):.0f}us,"
+            f" bytes x{kv['bytes_reduction']})")
+    if not parts:
+        return None
+    return "# fused-vs-unfused: " + " | ".join(parts)
+
+
+def _persist_table1(results: dict, repeat: int) -> Path | None:
+    section = results["sections"].get("table1")
+    if not section or section["status"] != "ok":
+        return None
+    path = Path(__file__).resolve().parents[1] / "BENCH_table1.json"
+    path.write_text(json.dumps(
+        {"smoke": results["smoke"], "timestamp": results["timestamp"],
+         "repeat": repeat, "rows": section["rows"]}, indent=2))
+    return path
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -64,7 +120,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="write structured results to this path")
     ap.add_argument("--only", default=None,
                     help="comma-separated section subset (e.g. table1,fig4)")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="median-of-N timing: run each section N times")
     args = ap.parse_args(argv)
+    if args.repeat < 1:
+        ap.error("--repeat must be >= 1")
 
     only = set(args.only.split(",")) if args.only else None
     if only:
@@ -81,7 +141,8 @@ def main(argv: list[str] | None = None) -> None:
             continue
         t0 = time.perf_counter()
         try:
-            lines = _call_main(mod, args.smoke)
+            lines = _median_lines(
+                [_call_main(mod, args.smoke) for _ in range(args.repeat)])
             for line in lines:
                 print(line)
             results["sections"][name] = {
@@ -99,6 +160,14 @@ def main(argv: list[str] | None = None) -> None:
             }
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               file=sys.stderr)
+    table1 = results["sections"].get("table1")
+    if table1 and table1["status"] == "ok":
+        cmp_line = _fused_comparison_line(table1["rows"])
+        if cmp_line:
+            print(cmp_line)
+        persisted = _persist_table1(results, args.repeat)
+        if persisted:
+            print(f"# wrote {persisted}", file=sys.stderr)
     if args.json:
         Path(args.json).parent.mkdir(parents=True, exist_ok=True)
         Path(args.json).write_text(json.dumps(results, indent=2))

@@ -63,6 +63,11 @@ class ArchConfig:
     # MoE dispatch locality (False = global/baseline, True = GShard groups;
     # see models/blocks.moe_apply and EXPERIMENTS.md §Perf H2/H3)
     moe_local_dispatch: bool = False
+    # fused producer–consumer kernel path (kernels/fused.py): norm folded
+    # into qkv/gate/up matmul prologues, bias+act / residual epilogues, and
+    # flash attention with the output projection fused. Applies wherever a
+    # block's norm kind is fusable; falls back per-site otherwise.
+    use_fused: bool = False
 
     @property
     def hd(self) -> int:
@@ -216,6 +221,9 @@ class KernelTuneRecord:
     modeled_seconds: float
     default_blocks: tuple[tuple[str, int], ...] = ()
     default_modeled_seconds: float = 0.0
+    # fused kernels only: the intermediate write+read the fusion removed
+    # from HBM under the winning blocking (0.0 for unfused kernels)
+    saved_bytes: float = 0.0
 
     @property
     def modeled_speedup(self) -> float:

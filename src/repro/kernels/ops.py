@@ -4,30 +4,101 @@ Dispatch: real `pl.pallas_call` lowering on TPU; `interpret=True` (kernel
 body executed op-by-op on CPU) everywhere else — numerics identical, which
 is what the allclose tests against ref.py verify.
 
-Every wrapper takes its block sizes as static kwargs (defaults match the
-kernel modules); `tuned_call` routes through the pipeline-layer autotuner
-(kernels/pipeline.py) + the configs registry, so callers get the
-model-scored blocking for their exact shapes with one call.
+Every kernel registers one `OpDescriptor` in `OPS` — the single table
+holding its public wrapper, its runtime-operand -> pipeline-shape-dict
+mapping, and which operand's dtype sets the VMEM tile footprint. The
+fused kernels (kernels/fused.py) register here too, so `tuned_call`
+serves fused and unfused names uniformly.
+
+The fused wrappers carry a `custom_vjp`: the forward runs the fused Pallas
+kernel; the backward recomputes through the jnp reference composition
+(FlashAttention-style — residuals are the kernel *inputs*, so the fused
+intermediate stays out of HBM in the forward pass, which is where the
+serve path and the activation-bound training forward spend their traffic).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Callable
 
 import jax
+import jax.numpy as jnp
 
 from . import axpy as _axpy
 from . import conv2d as _conv2d
 from . import dct8x8 as _dct8x8
 from . import dotp as _dotp
 from . import flash_attention as _fa
+from . import fused as _fused
 from . import matmul as _matmul
 from . import pipeline as _pipeline
+from . import ref as _ref
 from . import rmsnorm as _rmsnorm
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------------------
+# Kernel descriptor table — one record per public kernel
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OpDescriptor:
+    """A kernel's public contract in one place.
+
+    `shapes(*operands)` maps the wrapper's runtime operands to the
+    pipeline-layer shape dict (the autotuner key); `streamed_operand` is the
+    index of the main streamed operand — the one whose dtype sets the VMEM
+    tile footprint (weights/scales/alpha ride along). `fused` marks kernels
+    whose Traffic carries `saved_bytes` (an eliminated intermediate).
+    """
+
+    name: str
+    wrapper: Callable
+    shapes: Callable[..., dict]
+    streamed_operand: int = 0
+    fused: bool = False
+
+
+OPS: dict[str, OpDescriptor] = {}
+
+
+def register_op(desc: OpDescriptor) -> OpDescriptor:
+    OPS[desc.name] = desc
+    return desc
+
+
+def wrapper_for(name: str):
+    """Public name -> jit'd wrapper dispatch (same table tuned_call uses)."""
+    return OPS[name].wrapper
+
+
+def kernel_shapes(name: str, *operands) -> dict:
+    """The pipeline-layer shape dict for a kernel's runtime operands.
+
+    Operand order matches the public wrapper, so `kernel_shapes(name,
+    *args)` pairs with `tuned_call(name, *args)`.
+    """
+    return OPS[name].shapes(*operands)
+
+
+def tuned_call(name: str, *operands, **kwargs):
+    """Run a kernel with autotuned (registry-cached) block sizes."""
+    desc = OPS[name]
+    shapes = desc.shapes(*operands)
+    dtype_bytes = operands[desc.streamed_operand].dtype.itemsize
+    blocks = _pipeline.tuned_blocks(name, shapes, dtype_bytes=dtype_bytes)
+    return desc.wrapper(*operands, **blocks, **kwargs)
+
+
+# ----------------------------------------------------------------------------
+# The unfused kernel suite
+# ----------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
@@ -72,63 +143,203 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int | None = None,
 
 
 # ----------------------------------------------------------------------------
-# Tuned dispatch
+# Fused kernels: Pallas forward, reference-composition backward
 # ----------------------------------------------------------------------------
 
-_WRAPPERS = {
-    "axpy": axpy, "dotp": dotp, "matmul": matmul, "conv2d": conv2d_3x3,
-    "dct8x8": dct8x8, "rmsnorm": rmsnorm, "flash_attention": flash_attention,
-}
+
+def _ref_rmsnorm_matmul(x, scale, w):
+    return jnp.dot(_ref.rmsnorm(x, scale), w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-def wrapper_for(name: str):
-    """Public name -> jit'd wrapper dispatch (same registry tuned_call uses)."""
-    return _WRAPPERS[name]
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _rmsnorm_matmul_p(blocks: tuple, x, scale, w):
+    return _fused.rmsnorm_matmul(x, scale, w, interpret=_interpret(),
+                                 **dict(blocks))
 
 
-def kernel_shapes(name: str, *operands) -> dict:
-    """The pipeline-layer shape dict for a kernel's runtime operands.
-
-    Operand order matches the public wrapper (alpha/weight operands
-    included), so `kernel_shapes(name, *args)` pairs with
-    `tuned_call(name, *args)`.
-    """
-    if name == "axpy":
-        _, x, _ = operands
-        return {"m": x.shape[0], "n": x.shape[1]}
-    if name == "dotp":
-        x, _ = operands
-        return {"m": x.shape[0], "n": x.shape[1]}
-    if name == "matmul":
-        a, b = operands
-        return {"m": a.shape[0], "k": a.shape[1], "n": b.shape[1]}
-    if name == "conv2d":
-        x, _ = operands
-        return {"h": x.shape[0], "w": x.shape[1]}
-    if name == "dct8x8":
-        (blocks,) = operands
-        return {"n": blocks.shape[0]}
-    if name == "rmsnorm":
-        x, _ = operands
-        return {"m": x.shape[0], "d": x.shape[1]}
-    if name == "flash_attention":
-        q, k, _ = operands
-        b, h, s, hd = q.shape
-        return {"b": b, "h": h, "kv": k.shape[1], "s": s, "hd": hd}
-    raise KeyError(name)
+def _rmsnorm_matmul_fwd(blocks, x, scale, w):
+    return _rmsnorm_matmul_p(blocks, x, scale, w), (x, scale, w)
 
 
-# index of the main *streamed* operand per kernel — the one whose dtype
-# sets the VMEM tile footprint (weights/scales/alpha ride along)
-_STREAMED_OPERAND = {
-    "axpy": 1, "dotp": 0, "matmul": 0, "conv2d": 0, "dct8x8": 0,
-    "rmsnorm": 0, "flash_attention": 0,
-}
+def _rmsnorm_matmul_bwd(blocks, res, g):
+    _, vjp = jax.vjp(_ref_rmsnorm_matmul, *res)
+    return vjp(g)
 
 
-def tuned_call(name: str, *operands, **kwargs):
-    """Run a kernel with autotuned (registry-cached) block sizes."""
-    shapes = kernel_shapes(name, *operands)
-    dtype_bytes = operands[_STREAMED_OPERAND[name]].dtype.itemsize
-    blocks = _pipeline.tuned_blocks(name, shapes, dtype_bytes=dtype_bytes)
-    return _WRAPPERS[name](*operands, **blocks, **kwargs)
+_rmsnorm_matmul_p.defvjp(_rmsnorm_matmul_fwd, _rmsnorm_matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def rmsnorm_matmul(x, scale, w, *, bm: int | None = None,
+                   bn: int | None = None):
+    """matmul(rmsnorm(x, scale), w); the normed x never round-trips HBM."""
+    return _rmsnorm_matmul_p((("bm", bm), ("bn", bn)), x, scale, w)
+
+
+def _ref_matmul_bias_act(act: str, a, b, bias):
+    h = jnp.dot(a, b, preferred_element_type=jnp.float32) \
+        + bias.astype(jnp.float32)
+    return _fused.ACTIVATIONS[act](h).astype(a.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _matmul_bias_act_p(act: str, blocks: tuple, a, b, bias):
+    return _fused.matmul_bias_act(a, b, bias, act=act,
+                                  interpret=_interpret(), **dict(blocks))
+
+
+def _matmul_bias_act_fwd(act, blocks, a, b, bias):
+    return _matmul_bias_act_p(act, blocks, a, b, bias), (a, b, bias)
+
+
+def _matmul_bias_act_bwd(act, blocks, res, g):
+    _, vjp = jax.vjp(functools.partial(_ref_matmul_bias_act, act), *res)
+    return vjp(g)
+
+
+_matmul_bias_act_p.defvjp(_matmul_bias_act_fwd, _matmul_bias_act_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+def matmul_bias_act(a, b, bias, *, act: str = "gelu", bm: int | None = None,
+                    bn: int | None = None, bk: int | None = None):
+    """act(a @ b + bias) with the epilogue applied before writeback."""
+    return _matmul_bias_act_p(act, (("bm", bm), ("bn", bn), ("bk", bk)),
+                              a, b, bias)
+
+
+def _ref_matmul_residual_add(a, b, res):
+    return (jnp.dot(a, b, preferred_element_type=jnp.float32)
+            + res.astype(jnp.float32)).astype(a.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _matmul_residual_add_p(blocks: tuple, a, b, res):
+    return _fused.matmul_residual_add(a, b, res, interpret=_interpret(),
+                                      **dict(blocks))
+
+
+def _matmul_residual_add_fwd(blocks, a, b, res):
+    return _matmul_residual_add_p(blocks, a, b, res), (a, b, res)
+
+
+def _matmul_residual_add_bwd(blocks, res_, g):
+    _, vjp = jax.vjp(_ref_matmul_residual_add, *res_)
+    return vjp(g)
+
+
+_matmul_residual_add_p.defvjp(_matmul_residual_add_fwd,
+                              _matmul_residual_add_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_residual_add(a, b, res, *, bm: int | None = None,
+                        bn: int | None = None, bk: int | None = None):
+    """a @ b + res; the matmul output never round-trips HBM."""
+    return _matmul_residual_add_p((("bm", bm), ("bn", bn), ("bk", bk)),
+                                  a, b, res)
+
+
+def _ref_flash_attention_proj(causal: bool, q, k, v, wo):
+    g = q.shape[1] // k.shape[1]
+    o = _ref.flash_attention(q, jnp.repeat(k, g, axis=1),
+                             jnp.repeat(v, g, axis=1), causal=causal)
+    return jnp.einsum("bhsk,hkd->bsd", o, wo).astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _flash_attention_proj_p(causal: bool, blocks: tuple, q, k, v, wo):
+    return _fused.flash_attention_proj(q, k, v, wo, causal=causal,
+                                       interpret=_interpret(),
+                                       **dict(blocks))
+
+
+def _flash_attention_proj_fwd(causal, blocks, q, k, v, wo):
+    return _flash_attention_proj_p(causal, blocks, q, k, v, wo), (q, k, v, wo)
+
+
+def _flash_attention_proj_bwd(causal, blocks, res, g):
+    _, vjp = jax.vjp(functools.partial(_ref_flash_attention_proj, causal),
+                     *res)
+    return vjp(g)
+
+
+_flash_attention_proj_p.defvjp(_flash_attention_proj_fwd,
+                               _flash_attention_proj_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention_proj(q, k, v, wo, *, causal: bool = True,
+                         bq: int | None = None, bk: int | None = None):
+    """Flash attention with the output projection fused across heads."""
+    return _flash_attention_proj_p(causal, (("bq", bq), ("bk", bk)),
+                                   q, k, v, wo)
+
+
+# ----------------------------------------------------------------------------
+# Descriptor registration
+# ----------------------------------------------------------------------------
+
+
+def _shapes_axpy(alpha, x, y):
+    return {"m": x.shape[0], "n": x.shape[1]}
+
+
+def _shapes_dotp(x, y):
+    return {"m": x.shape[0], "n": x.shape[1]}
+
+
+def _shapes_matmul(a, b):
+    return {"m": a.shape[0], "k": a.shape[1], "n": b.shape[1]}
+
+
+def _shapes_conv2d(x, w):
+    return {"h": x.shape[0], "w": x.shape[1]}
+
+
+def _shapes_dct8x8(blocks):
+    return {"n": blocks.shape[0]}
+
+
+def _shapes_rmsnorm(x, scale):
+    return {"m": x.shape[0], "d": x.shape[1]}
+
+
+def _shapes_flash_attention(q, k, v):
+    b, h, s, hd = q.shape
+    return {"b": b, "h": h, "kv": k.shape[1], "s": s, "hd": hd}
+
+
+def _shapes_rmsnorm_matmul(x, scale, w):
+    return {"m": x.shape[0], "k": x.shape[1], "n": w.shape[1]}
+
+
+def _shapes_matmul_epilogue(a, b, extra):
+    return {"m": a.shape[0], "k": a.shape[1], "n": b.shape[1]}
+
+
+def _shapes_flash_attention_proj(q, k, v, wo):
+    b, h, s, hd = q.shape
+    return {"b": b, "h": h, "kv": k.shape[1], "s": s, "hd": hd,
+            "dm": wo.shape[-1]}
+
+
+for _desc in (
+    OpDescriptor("axpy", axpy, _shapes_axpy, streamed_operand=1),
+    OpDescriptor("dotp", dotp, _shapes_dotp),
+    OpDescriptor("matmul", matmul, _shapes_matmul),
+    OpDescriptor("conv2d", conv2d_3x3, _shapes_conv2d),
+    OpDescriptor("dct8x8", dct8x8, _shapes_dct8x8),
+    OpDescriptor("rmsnorm", rmsnorm, _shapes_rmsnorm),
+    OpDescriptor("flash_attention", flash_attention, _shapes_flash_attention),
+    OpDescriptor("rmsnorm_matmul", rmsnorm_matmul, _shapes_rmsnorm_matmul,
+                 fused=True),
+    OpDescriptor("matmul_bias_act", matmul_bias_act, _shapes_matmul_epilogue,
+                 fused=True),
+    OpDescriptor("matmul_residual_add", matmul_residual_add,
+                 _shapes_matmul_epilogue, fused=True),
+    OpDescriptor("flash_attention_proj", flash_attention_proj,
+                 _shapes_flash_attention_proj, fused=True),
+):
+    register_op(_desc)

@@ -96,14 +96,131 @@ class GridAxis:
         assert self.size >= 1, (self.name, self.size)
 
 
+# ----------------------------------------------------------------------------
+# Fusion hooks — prologue on streamed input tiles, epilogue before writeback
+# ----------------------------------------------------------------------------
+#
+# MemPool's DMA engine exists so intermediate tiles are *consumed in L1*
+# instead of bouncing through higher memory. The TPU translation: a producer
+# kernel's body is stitched into the consumer's grid either as a *prologue*
+# (applied to a streamed operand tile right after it lands in VMEM — e.g.
+# rmsnorm folded onto the matmul A tile) or an *epilogue* (applied to the
+# register/output tile right before writeback — e.g. bias + GELU after the
+# K loop). Both run on tile *values*; the hook machinery below intercepts
+# ref loads/stores so existing kernel bodies compose unchanged.
+
+
+@dataclasses.dataclass(frozen=True)
+class _Hook:
+    """One fusion hook bound to its own slice of the extra-tile operands.
+
+    Each fuse() call appends its extra tiles and binds its hooks to exactly
+    that range, so stacked fusions never see each other's operands.
+    """
+
+    fn: Callable
+    extras_range: tuple[int, int]       # half-open range into extra_tiles
+
+    def __call__(self, value, extras: tuple):
+        lo, hi = self.extras_range
+        return self.fn(value, *extras[lo:hi])
+
+
+class _PrologueRef:
+    """Wraps an input ref; loads run through the hook chain in fuse order."""
+
+    def __init__(self, ref, hooks: Sequence[_Hook], extras: tuple):
+        self._ref = ref
+        self._hooks = tuple(hooks)
+        self._extras = extras
+
+    def __getitem__(self, idx):
+        value = self._ref[idx]
+        for hook in self._hooks:
+            value = hook(value, self._extras)
+        return value
+
+    def __getattr__(self, name):
+        return getattr(self._ref, name)
+
+
+class _EpilogueRef:
+    """Wraps an output ref; stores run through the hook chain (innermost —
+    most recently fused — first).
+
+    Each hook sees the value the body (or the previous hook) produced and
+    returns the fused result; the wrapper re-casts at the end so hooks are
+    free to compute in f32.
+    """
+
+    def __init__(self, ref, hooks: Sequence[_Hook], extras: tuple):
+        self._ref = ref
+        self._hooks = tuple(hooks)
+        self._extras = extras
+
+    def __setitem__(self, idx, value):
+        for hook in self._hooks:
+            value = hook(value, self._extras)
+        self._ref[idx] = value.astype(self._ref.dtype)
+
+    def __getitem__(self, idx):
+        return self._ref[idx]
+
+    def __getattr__(self, name):
+        return getattr(self._ref, name)
+
+
+class FusionError(ValueError):
+    """Raised when producer/consumer TileSpecs cannot be stitched."""
+
+
+def check_fusable(producer_tile: TileSpec, consumer_tile: TileSpec,
+                  *, full_dims: Sequence[int] = (),
+                  dims: Sequence[int] = ()) -> None:
+    """Validate that a producer's output tile can feed a consumer's input.
+
+    Same residency (both pipelined VMEM or both SMEM) and identical block
+    shape — the producer tile must be *fully consumed* in the step that
+    loads it, or the fusion would recompute partial tiles inconsistently.
+    `full_dims` lists block axes that must span the whole array dimension
+    (given through `dims`), e.g. a row-normalization folded into a matmul
+    prologue needs the entire reduction dim resident per tile.
+    """
+    if producer_tile.memory_space != consumer_tile.memory_space:
+        raise FusionError(
+            f"residency mismatch: producer {producer_tile.memory_space} vs "
+            f"consumer {consumer_tile.memory_space}")
+    if tuple(producer_tile.block) != tuple(consumer_tile.block):
+        raise FusionError(
+            f"tile shape mismatch: producer {producer_tile.block} vs "
+            f"consumer {consumer_tile.block}; the producer tile must be "
+            f"fully consumed per grid step")
+    for axis, dim in zip(full_dims, dims):
+        if consumer_tile.block[axis] != dim:
+            raise FusionError(
+                f"block axis {axis} covers {consumer_tile.block[axis]} of "
+                f"{dim}; the fused producer needs the full dimension "
+                f"resident per tile")
+
+
 class KernelPipeline:
-    """Builds one `pl.pallas_call` from tiles + grid + register-tile scratch."""
+    """Builds one `pl.pallas_call` from tiles + grid + register-tile scratch.
+
+    `prologues` maps input-operand index -> hook applied to that operand's
+    tile on load; `epilogue` is applied to every output-tile store.
+    `extra_tiles` are additional operands (scales, biases, residual tiles)
+    consumed only by the hooks; they are appended after `in_tiles` in the
+    emitted pallas_call's operand order.
+    """
 
     def __init__(self, name: str, body: Callable, grid: Sequence[GridAxis],
                  in_tiles: Sequence[TileSpec],
                  out_tiles: TileSpec | Sequence[TileSpec],
                  out_shape: Any, scratch: Sequence[Any] = (),
-                 cost: "Traffic | None" = None):
+                 cost: "Traffic | None" = None,
+                 prologues: dict[int, Callable] | None = None,
+                 epilogue: Callable | None = None,
+                 extra_tiles: Sequence[TileSpec] = ()):
         self.name = name
         self.body = body
         self.grid = tuple(grid)
@@ -114,6 +231,51 @@ class KernelPipeline:
         self.out_shape = out_shape
         self.scratch = tuple(scratch)
         self.cost = cost
+        self.extra_tiles = tuple(extra_tiles)
+        whole = (0, len(self.extra_tiles))
+        self._pro_hooks: dict[int, list[_Hook]] = {
+            idx: [_Hook(fn, whole)] for idx, fn in (prologues or {}).items()}
+        self._epi_hooks: list[_Hook] = \
+            [_Hook(epilogue, whole)] if epilogue is not None else []
+        for idx in self._pro_hooks:
+            if not 0 <= idx < len(self.in_tiles):
+                raise FusionError(f"prologue on operand {idx}, but pipeline "
+                                  f"has {len(self.in_tiles)} inputs")
+
+    def fuse(self, *, prologues: dict[int, Callable] | None = None,
+             epilogue: Callable | None = None,
+             extra_tiles: Sequence[TileSpec] = (),
+             name: str | None = None,
+             cost: "Traffic | None" = None) -> "KernelPipeline":
+        """Return a new pipeline with producer/consumer hooks stitched in.
+
+        The new fusion's extra tiles are appended and its hooks are bound
+        to exactly that slice, so stacked fusions compose without seeing
+        each other's operands. Prologue indices refer to the *core* operand
+        order; an existing hook on the same slot composes (new prologue
+        runs after the old one; new epilogue before the old one, i.e.
+        closest to the register tile first).
+        """
+        fused = KernelPipeline(
+            name=name or self.name, body=self.body, grid=self.grid,
+            in_tiles=self.in_tiles, out_tiles=(
+                tuple(self.out_tiles) if self.multi_out else self.out_tiles[0]),
+            out_shape=self.out_shape, scratch=self.scratch,
+            cost=cost if cost is not None else self.cost,
+            extra_tiles=(*self.extra_tiles, *extra_tiles))
+        fused._pro_hooks = {idx: list(hooks)
+                            for idx, hooks in self._pro_hooks.items()}
+        fused._epi_hooks = list(self._epi_hooks)
+        rng = (len(self.extra_tiles),
+               len(self.extra_tiles) + len(extra_tiles))
+        for idx, fn in (prologues or {}).items():
+            if not 0 <= idx < len(self.in_tiles):
+                raise FusionError(f"prologue on operand {idx}, but pipeline "
+                                  f"has {len(self.in_tiles)} inputs")
+            fused._pro_hooks.setdefault(idx, []).append(_Hook(fn, rng))
+        if epilogue is not None:
+            fused._epi_hooks.insert(0, _Hook(epilogue, rng))
+        return fused
 
     # -- introspection -------------------------------------------------------
     @property
@@ -132,7 +294,8 @@ class KernelPipeline:
         construction per candidate); those may under-count resident constant
         tiles deliberately (e.g. conv2d's 3x3 weight is charged once).
         """
-        tiles = [t for t in (*self.in_tiles, *self.out_tiles)
+        tiles = [t for t in (*self.in_tiles, *self.extra_tiles,
+                             *self.out_tiles)
                  if t.memory_space is None]
         streamed = 2 * sum(t.bytes_per_step(dtype_bytes) for t in tiles)
         scratch = 0
@@ -145,6 +308,33 @@ class KernelPipeline:
         return streamed + scratch
 
     # -- emission ------------------------------------------------------------
+    def _hooked_body(self) -> Callable:
+        """Wrap `body` so hook-bearing refs apply prologues/epilogue.
+
+        The emitted kernel receives (core inputs, extra tiles, outputs,
+        scratch); the original body still sees only (core inputs, outputs,
+        scratch) — fusion operands exist purely for the hooks.
+        """
+        if not (self._pro_hooks or self._epi_hooks or self.extra_tiles):
+            return self.body
+        n_in = len(self.in_tiles)
+        n_extra = len(self.extra_tiles)
+        n_out = len(self.out_tiles)
+
+        def wrapped(*refs):
+            core = list(refs[:n_in])
+            extras = tuple(refs[n_in:n_in + n_extra])
+            outs = list(refs[n_in + n_extra:n_in + n_extra + n_out])
+            scratch = refs[n_in + n_extra + n_out:]
+            for idx, hooks in self._pro_hooks.items():
+                core[idx] = _PrologueRef(core[idx], hooks, extras)
+            if self._epi_hooks:
+                outs = [_EpilogueRef(o, self._epi_hooks, extras)
+                        for o in outs]
+            return self.body(*core, *outs, *scratch)
+
+        return wrapped
+
     def pallas_call(self, *, interpret: bool = False) -> Callable:
         out_specs = tuple(t.block_spec() for t in self.out_tiles)
         kwargs: dict[str, Any] = {}
@@ -154,9 +344,10 @@ class KernelPipeline:
                 bytes_accessed=int(self.cost.hbm_bytes),
                 transcendentals=int(self.cost.transcendentals))
         return pl.pallas_call(
-            self.body,
+            self._hooked_body(),
             grid=tuple(a.size for a in self.grid),
-            in_specs=[t.block_spec() for t in self.in_tiles],
+            in_specs=[t.block_spec()
+                      for t in (*self.in_tiles, *self.extra_tiles)],
             out_specs=out_specs if self.multi_out else out_specs[0],
             out_shape=self.out_shape,
             scratch_shapes=list(self.scratch),
@@ -176,7 +367,14 @@ class KernelPipeline:
 
 @dataclasses.dataclass(frozen=True)
 class Traffic:
-    """Structural traffic of one kernel invocation under a given blocking."""
+    """Structural traffic of one kernel invocation under a given blocking.
+
+    `saved_bytes` is only set on fused kernels: the intermediate's write +
+    read that the unfused producer/consumer composition would have streamed
+    through HBM and the fusion eliminates. The unfused composition's traffic
+    is therefore `hbm_bytes + saved_bytes` (plus the producer's own operand
+    reads, which both paths share).
+    """
 
     flops: float
     hbm_bytes: float        # streamed under this blocking (re-fetches counted)
@@ -184,6 +382,31 @@ class Traffic:
     grid_steps: int
     vmem_bytes: int
     transcendentals: float = 0.0
+    saved_bytes: float = 0.0
+
+
+def fused_traffic(consumer: Traffic, producer: Traffic,
+                  intermediate_bytes: float, *,
+                  extra_vmem: int = 0, refetch: int = 1) -> Traffic:
+    """Traffic of a producer fused into a consumer's grid.
+
+    The producer's compute rides along (re-run `refetch` times when the
+    consumer re-streams the fused operand — e.g. a norm prologue recomputes
+    once per N-block column); the intermediate's HBM write (producer side)
+    and read (consumer side) disappear. `intermediate_bytes` is the size of
+    that intermediate counted once.
+    """
+    saved = 2.0 * intermediate_bytes
+    return Traffic(
+        flops=consumer.flops + producer.flops * refetch,
+        hbm_bytes=consumer.hbm_bytes + producer.hbm_bytes - saved,
+        ideal_bytes=consumer.ideal_bytes + producer.ideal_bytes - saved,
+        grid_steps=consumer.grid_steps,
+        vmem_bytes=consumer.vmem_bytes + extra_vmem,
+        transcendentals=(consumer.transcendentals
+                         + producer.transcendentals * refetch),
+        saved_bytes=saved,
+    )
 
 
 # fixed per-grid-step pipeline bookkeeping (index computation, DMA issue);
@@ -376,12 +599,14 @@ def autotune(kernel: str, shapes: dict, *, dtype_bytes: int = 4,
                         default_cost=default_cost)
     if register_record:
         from repro.configs import registry
+        best_traffic = defn.traffic(shapes, best_blocks, dtype_bytes)
         registry.register_kernel_tune(registry.KernelTuneRecord(
             kernel=kernel, shape_key=shape_key(shapes, dtype_bytes),
             blocks=tuple(sorted(best_blocks.items())),
             modeled_seconds=best_cost.total_s,
             default_blocks=tuple(sorted(default.items())),
-            default_modeled_seconds=default_cost.total_s))
+            default_modeled_seconds=default_cost.total_s,
+            saved_bytes=best_traffic.saved_bytes))
     return result
 
 

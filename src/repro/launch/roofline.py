@@ -37,6 +37,27 @@ def kernel_roofline(flops: float, hbm_bytes: float) -> dict:
     }
 
 
+def fused_roofline(flops: float, hbm_bytes: float,
+                   saved_bytes: float) -> dict:
+    """Roofline of a fused kernel, with the dropped intermediate made
+    explicit: the unfused composition would stream `hbm_bytes + saved_bytes`
+    (the intermediate's write + read), so the fused memory term drops by
+    `saved_s` and the traffic_reduction factor is what the fusion bought.
+    The autotuner's fused candidates are scored on exactly this reduced
+    `hbm_bytes`, so saved traffic is what ranks them above the composition.
+    """
+    from repro.core import mesh as hw
+    r = kernel_roofline(flops, hbm_bytes)
+    unfused = kernel_roofline(flops, hbm_bytes + saved_bytes)
+    r.update({
+        "saved_bytes": saved_bytes,
+        "saved_s": saved_bytes / hw.HBM_BW,
+        "unfused_memory_s": unfused["memory_s"],
+        "traffic_reduction": (hbm_bytes + saved_bytes) / max(hbm_bytes, 1.0),
+    })
+    return r
+
+
 def load(mesh: str = "single", variants: bool = False) -> list[dict]:
     rows = []
     for p in sorted(RESULTS.glob("*.json")):

@@ -343,7 +343,22 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 # public entry points
 # ----------------------------------------------------------------------------
 
-Schedule = Literal["auto", "direct", "masked", "folded", "banded"]
+Schedule = Literal["auto", "direct", "masked", "folded", "banded", "pallas"]
+
+
+def pallas_flash_attention(q, k, v, *, causal: bool = True):
+    """Route model-layout attention through the Pallas flash kernel.
+
+    q: (B, S, H, hd); k/v: (B, S, KV, hd) — transposed to the kernel's
+    (B, H, S, hd) layout and back. Forward-only (no custom VJP): the serve
+    path's schedule; training uses the jnp flash VJP or, under
+    cfg.use_fused, the fused kernels' reference-composition backward.
+    """
+    from repro.kernels import ops
+    o = ops.flash_attention(jnp.transpose(q, (0, 2, 1, 3)),
+                            jnp.transpose(k, (0, 2, 1, 3)),
+                            jnp.transpose(v, (0, 2, 1, 3)), causal=causal)
+    return jnp.transpose(o, (0, 2, 1, 3))
 
 
 def attention(q, k, v, *, n_kv: int, causal: bool = True,
@@ -351,6 +366,10 @@ def attention(q, k, v, *, n_kv: int, causal: bool = True,
               schedule: Schedule = "auto"):
     """Training/prefill attention. q: (B,S,H,hd); k/v: (B,S,KV,hd)."""
     s = q.shape[1]
+    if schedule == "pallas" and causal and window is None:
+        return pallas_flash_attention(q, k, v, causal=True)
+    if schedule == "pallas":          # kernel has no SWA/bidirectional path
+        schedule = "auto"
     if schedule == "auto":
         if s <= 2 * chunk or s % chunk or not causal:
             schedule = "direct"

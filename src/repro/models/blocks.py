@@ -20,8 +20,10 @@ import jax.numpy as jnp
 from repro.core.overlap import shard_batch
 
 from . import attention as attn_lib
-from .layers import (ParamSpec, apply_ffn, attn_specs, ffn_specs, out_project,
-                     qkv_project, rms_norm, layer_norm)
+from .layers import (ParamSpec, apply_ffn, attn_specs, ffn_specs,
+                     fused_attention_proj, fused_matmul_bias_act,
+                     fused_matmul_residual, fused_norm_matmul, out_project,
+                     qkv_postprocess, qkv_project, rms_norm, layer_norm)
 
 F32 = jnp.float32
 
@@ -54,7 +56,49 @@ def attn_block_specs(cfg) -> dict:
     return s
 
 
+def _fused_rms(cfg) -> bool:
+    """Is the fused producer–consumer path applicable to this block's norm?"""
+    return bool(getattr(cfg, "use_fused", False)) and cfg.norm == "rms"
+
+
+def _fused_qkv(cfg, p, x, ctx):
+    """qkv with the pre-attention rmsnorm folded into each projection's
+    A-tile prologue (norm recomputed per consumer; the normed activations
+    never round-trip HBM)."""
+    a = p["attn"]
+    d = x.shape[-1]
+
+    def proj(w):
+        y = fused_norm_matmul(x, p["ln_attn"], w.reshape(d, -1))
+        return y.reshape(*x.shape[:-1], w.shape[1], w.shape[2])
+
+    return qkv_postprocess(a, proj(a["wq"]), proj(a["wk"]), proj(a["wv"]),
+                           ctx["positions"], qkv_bias=cfg.qkv_bias,
+                           qk_norm=cfg.qk_norm, rope=ctx.get("rope", True),
+                           theta=cfg.rope_theta)
+
+
+def _fused_out_residual(p, o, x):
+    """x + out_project(o) with the residual added in the matmul epilogue."""
+    wo = p["attn"]["wo"]
+    flat = o.reshape(*o.shape[:-2], o.shape[-2] * o.shape[-1])
+    return fused_matmul_residual(flat, wo.reshape(-1, wo.shape[-1]), x)
+
+
 def _self_attention(cfg, p, x, ctx, *, window, causal=True):
+    if _fused_rms(cfg):
+        q, k, v = _fused_qkv(cfg, p, x, ctx)
+        if causal and window is None:
+            # the whole hot path in one kernel: flash attention with the
+            # output projection accumulated across heads in VMEM (backward
+            # recomputes via the reference composition — see kernels/ops.py)
+            return x + fused_attention_proj(q, k, v, p["attn"]["wo"],
+                                            causal=True)
+        o = attn_lib.attention(q, k, v, n_kv=cfg.n_kv_heads,
+                               causal=causal, window=window,
+                               chunk=cfg.attn_chunk,
+                               schedule=cfg.attn_schedule)
+        return _fused_out_residual(p, o, x)
     q, k, v = qkv_project(p["attn"], _norm(cfg, p, "ln_attn", x),
                           ctx["positions"], n_heads=cfg.n_heads,
                           n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
@@ -66,12 +110,34 @@ def _self_attention(cfg, p, x, ctx, *, window, causal=True):
     return x + out_project(p["attn"], o)
 
 
+def _ffn_residual(cfg, p, x):
+    """x + FFN(norm(x)), with the fused kernel routing when enabled:
+    swiglu/geglu fold the norm into the gate/up prologues and the residual
+    into the down-projection epilogue; gelu MLPs take the bias+activation
+    epilogue. Falls back to the jnp composition per-site."""
+    if getattr(cfg, "use_fused", False):
+        f = p["ffn"]
+        if cfg.norm == "rms" and cfg.ffn_kind in ("swiglu", "geglu"):
+            g = fused_norm_matmul(x, p["ln_ffn"], f["w_gate"])
+            u = fused_norm_matmul(x, p["ln_ffn"], f["w_up"])
+            act = jax.nn.silu if cfg.ffn_kind == "swiglu" else jax.nn.gelu
+            h = act(g.astype(F32)).astype(x.dtype) * u
+            return fused_matmul_residual(h, f["w_down"], x)
+        if cfg.ffn_kind == "gelu":
+            h = fused_matmul_bias_act(_norm(cfg, p, "ln_ffn", x),
+                                      f["w_in"], f["b_in"], "gelu")
+            return x + fused_matmul_bias_act(h, f["w_out"], f["b_out"],
+                                             "none")
+    return x + apply_ffn(p["ffn"], _norm(cfg, p, "ln_ffn", x),
+                         kind=cfg.ffn_kind)
+
+
 def attn_block_apply(cfg, p, x, ctx, *, window=None):
     window = window if window is not None else cfg.window
     x = _self_attention(cfg, p, x, ctx, window=window,
                         causal=ctx.get("causal", True))
     if cfg.d_ff:
-        x = x + apply_ffn(p["ffn"], _norm(cfg, p, "ln_ffn", x), kind=cfg.ffn_kind)
+        x = _ffn_residual(cfg, p, x)
     return x, 0.0
 
 
@@ -87,18 +153,25 @@ def attn_cache_specs(cfg, B: int, cache_len: int) -> dict:
 def attn_block_decode(cfg, p, x, cache, pos, ctx, *, window=None):
     window = window if window is not None else cfg.window
     rolling = bool(window) and cache["k"].shape[1] < ctx["max_seq"]
-    q, k, v = qkv_project(p["attn"], _norm(cfg, p, "ln_attn", x),
-                          ctx["positions"], n_heads=cfg.n_heads,
-                          n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
-                          qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
-                          rope=ctx.get("rope", True), theta=cfg.rope_theta)
+    if _fused_rms(cfg):
+        q, k, v = _fused_qkv(cfg, p, x, ctx)
+    else:
+        q, k, v = qkv_project(p["attn"], _norm(cfg, p, "ln_attn", x),
+                              ctx["positions"], n_heads=cfg.n_heads,
+                              n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                              qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+                              rope=ctx.get("rope", True),
+                              theta=cfg.rope_theta)
     kc, vc = attn_lib.update_cache(cache["k"], cache["v"], k, v, pos,
                                    rolling=rolling)
     o = attn_lib.decode_attention(q, kc, vc, pos + 1, n_kv=cfg.n_kv_heads,
                                   window=window, rolling=rolling)
-    x = x + out_project(p["attn"], o)
+    if _fused_rms(cfg):
+        x = _fused_out_residual(p, o, x)
+    else:
+        x = x + out_project(p["attn"], o)
     if cfg.d_ff:
-        x = x + apply_ffn(p["ffn"], _norm(cfg, p, "ln_ffn", x), kind=cfg.ffn_kind)
+        x = _ffn_residual(cfg, p, x)
     return x, {"k": kc, "v": vc}
 
 
@@ -414,7 +487,7 @@ def enc_attn_block_apply(cfg, p, x, ctx):
     o = attn_lib.attention(q, k, v, n_kv=cfg.n_kv_heads, causal=False,
                            schedule="direct")
     x = x + out_project(p["attn"], o)
-    x = x + apply_ffn(p["ffn"], _norm(cfg, p, "ln_ffn", x), kind=cfg.ffn_kind)
+    x = _ffn_residual(cfg, p, x)
     return x, 0.0
 
 
@@ -481,7 +554,7 @@ def rglru_block_apply(cfg, p, x, ctx):
     _, states = jax.lax.associative_scan(combine, (a, b), axis=1)
     y = (gate * states).astype(x.dtype)
     x = x + jnp.einsum("bsr,rd->bsd", y, p["w_out"])
-    x = x + apply_ffn(p["ffn"], _norm(cfg, p, "ln_ffn", x), kind=cfg.ffn_kind)
+    x = _ffn_residual(cfg, p, x)
     return x, 0.0
 
 
@@ -504,7 +577,7 @@ def rglru_block_decode(cfg, p, x, cache, pos, ctx):
     h_new = a * cache["h"] + b                             # (B,r)
     y = (gate[:, 0] * h_new).astype(x.dtype)[:, None]
     x = x + jnp.einsum("bsr,rd->bsd", y, p["w_out"])
-    x = x + apply_ffn(p["ffn"], _norm(cfg, p, "ln_ffn", x), kind=cfg.ffn_kind)
+    x = _ffn_residual(cfg, p, x)
     return x, {"h": h_new, "conv": conv_state}
 
 

@@ -178,12 +178,9 @@ def apply_ffn(params: dict, x, *, kind: str = "swiglu"):
     raise ValueError(kind)
 
 
-def qkv_project(params: dict, x, positions, *, n_heads, n_kv_heads, head_dim,
-                qkv_bias=False, qk_norm=False, rope=True, theta=1e4):
-    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,KV,hd) with rope applied."""
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+def qkv_postprocess(params: dict, q, k, v, positions, *, qkv_bias=False,
+                    qk_norm=False, rope=True, theta=1e4):
+    """Bias / qk-norm / rope tail shared by the plain and fused qkv paths."""
     if qkv_bias:
         q = q + params["bq"]
         k = k + params["bk"]
@@ -197,6 +194,69 @@ def qkv_project(params: dict, x, positions, *, n_heads, n_kv_heads, head_dim,
     return q, k, v
 
 
+def qkv_project(params: dict, x, positions, *, n_heads, n_kv_heads, head_dim,
+                qkv_bias=False, qk_norm=False, rope=True, theta=1e4):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,KV,hd) with rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    return qkv_postprocess(params, q, k, v, positions, qkv_bias=qkv_bias,
+                           qk_norm=qk_norm, rope=rope, theta=theta)
+
+
 def out_project(params: dict, attn_out):
     """attn_out: (B, S, H, hd) -> (B, S, d)."""
     return jnp.einsum("bshk,hkd->bsd", attn_out, params["wo"])
+
+
+# ----------------------------------------------------------------------------
+# Fused kernel routing (cfg.use_fused): producer–consumer Pallas kernels
+# ----------------------------------------------------------------------------
+#
+# These helpers flatten the leading dims and dispatch to the fused wrappers
+# in kernels/ops.py, which carry custom VJPs (Pallas forward, reference-
+# composition backward) so the same route serves train and serve paths.
+
+def fused_norm_matmul(x, scale, w):
+    """rmsnorm(x, scale) @ w with the norm in the A-tile prologue.
+
+    x: (..., d); scale: (d,); w: (d, f) -> (..., f). The normalized
+    activations never round-trip HBM.
+    """
+    from repro.kernels import ops
+    d = x.shape[-1]
+    y = ops.rmsnorm_matmul(x.reshape(-1, d), scale, w)
+    return y.reshape(*x.shape[:-1], w.shape[1])
+
+
+def fused_matmul_residual(h, w, res):
+    """h @ w + res with the residual added in the output epilogue.
+
+    h: (..., f); w: (f, d); res: (..., d) -> (..., d).
+    """
+    from repro.kernels import ops
+    f = h.shape[-1]
+    y = ops.matmul_residual_add(h.reshape(-1, f), w,
+                                res.reshape(-1, w.shape[1]))
+    return y.reshape(res.shape)
+
+
+def fused_matmul_bias_act(h, w, bias, act: str):
+    """act(h @ w + bias) applied in the output epilogue. h: (..., f)."""
+    from repro.kernels import ops
+    f = h.shape[-1]
+    y = ops.matmul_bias_act(h.reshape(-1, f), w, bias, act=act)
+    return y.reshape(*h.shape[:-1], w.shape[1])
+
+
+def fused_attention_proj(q, k, v, wo, *, causal: bool = True):
+    """Flash attention + output projection in one kernel.
+
+    q: (B, S, H, hd), k/v: (B, S, KV, hd) (model layout), wo: (H, hd, d)
+    -> (B, S, d); the (B, H, S, hd) attention output never exists in HBM.
+    """
+    from repro.kernels import ops
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    return ops.flash_attention_proj(qt, kt, vt, wo, causal=causal)

@@ -228,8 +228,18 @@ def loss_fn(cfg, params, batch, layer_wsc=None):
 # Train step
 # ----------------------------------------------------------------------------
 
+def _resolve_fused(cfg, use_fused: bool | None):
+    """Step factories accept a `use_fused` override so benchmarks and tests
+    can compare the fused and unfused kernel routes on one config."""
+    if use_fused is None or use_fused == cfg.use_fused:
+        return cfg
+    return dataclasses.replace(cfg, use_fused=use_fused)
+
+
 def make_train_step(cfg, *, adam: AdamConfig | None = None,
-                    schedule_kwargs: dict | None = None, layer_wsc=None):
+                    schedule_kwargs: dict | None = None, layer_wsc=None,
+                    use_fused: bool | None = None):
+    cfg = _resolve_fused(cfg, use_fused)
     adam = adam or AdamConfig(moment_dtype=cfg.moment_dtype)
     sched = functools.partial(warmup_cosine, **(schedule_kwargs or {}))
     acc_dtype = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else F32
@@ -297,7 +307,9 @@ def init_train_state(cfg, key, max_seq: int = 4096,
 # Prefill / decode steps
 # ----------------------------------------------------------------------------
 
-def make_prefill_step(cfg):
+def make_prefill_step(cfg, *, use_fused: bool | None = None):
+    cfg = _resolve_fused(cfg, use_fused)
+
     def prefill_step(params, batch):
         cross = batch.get("enc_embeds", batch.get("img_embeds"))
         hidden, _ = forward(cfg, params, batch["tokens"], cross_embeds=cross)
@@ -309,9 +321,11 @@ def make_prefill_step(cfg):
     return prefill_step
 
 
-def make_decode_step(cfg, max_seq: int = 1 << 30):
+def make_decode_step(cfg, max_seq: int = 1 << 30, *,
+                     use_fused: bool | None = None):
     """`max_seq` is the workload's logical context length; caches shorter
     than it (windowed archs) operate as rolling buffers."""
+    cfg = _resolve_fused(cfg, use_fused)
     pattern, n_super, remainder = block_plan(cfg)
 
     def decode_step(params, cache, batch):

@@ -45,8 +45,18 @@ class ServeLoop:
         return np.concatenate(out, axis=1)
 
     def stats(self) -> dict:
-        lat = np.asarray(self.latencies[1:] or [0.0])
-        return {"decode_steps": len(self.latencies),
+        """Latency stats over the post-warmup steps (first step dropped —
+        it carries compilation). With zero or one recorded step there are
+        no measured samples, so throughput/percentiles report 0.0 rather
+        than the fake `1/epsilon` numbers an empty array would produce;
+        `decode_steps` counts the same warmup-dropped array the percentiles
+        are computed over.
+        """
+        lat = np.asarray(self.latencies[1:], np.float64)
+        if lat.size == 0:
+            return {"decode_steps": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                    "tokens_per_s_per_slot": 0.0}
+        return {"decode_steps": int(lat.size),
                 "p50_ms": float(np.percentile(lat, 50) * 1e3),
                 "p99_ms": float(np.percentile(lat, 99) * 1e3),
                 "tokens_per_s_per_slot": float(1.0 / max(lat.mean(), 1e-9))}

@@ -87,9 +87,15 @@ def reference(name, operands):
 
 ALL_KERNELS = sorted(SHAPES)
 
+# the fused producer–consumer kernels (kernels/fused.py); numerics covered
+# in tests/test_fused.py, registry membership checked here
+FUSED_KERNELS = ["flash_attention_proj", "matmul_bias_act",
+                 "matmul_residual_add", "rmsnorm_matmul"]
 
-def test_all_seven_registered():
-    assert sorted(pp.KERNELS) == ALL_KERNELS
+
+def test_all_kernels_registered():
+    assert sorted(pp.KERNELS) == sorted(ALL_KERNELS + FUSED_KERNELS)
+    assert sorted(ops.OPS) == sorted(ALL_KERNELS + FUSED_KERNELS)
 
 
 @pytest.mark.parametrize("name", ALL_KERNELS)

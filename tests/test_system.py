@@ -52,7 +52,10 @@ def test_train_then_serve_roundtrip(tmp_path):
     assert out.shape == (2, 6)
     assert (out >= 0).all() and (out < cfg.vocab).all()
     stats = serve.stats()
-    assert stats["decode_steps"] == 5
+    # decode_steps counts the warmup-dropped samples the percentiles use
+    # (5 generated tokens, first step dropped as compile warmup)
+    assert stats["decode_steps"] == 4
+    assert stats["tokens_per_s_per_slot"] > 0
 
 
 @pytest.mark.slow
