@@ -4,6 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows, exactly one section per paper
 artifact (Table 1, Fig. 4, 5, 13, 14, 15, 16). Modules degrade gracefully
 when optional inputs (dry-run results) are absent.
 
+A thin wrapper over the Cluster façade: the CLI builds a kernel-only
+`repro.cluster.Cluster`, scopes the requested `KernelPolicy` on it, and
+compiles a `BenchProgram` — every section runs under that policy, and the
+emitted JSON records the active policy (mode, overrides, and the
+tune-record hit/miss counters) so every row is attributable to a policy.
+
 Flags:
   --smoke       tiny shapes / model-only paths so every bench finishes in
                 seconds — the CI smoke lane
@@ -12,6 +18,7 @@ Flags:
   --only NAMES  comma-separated subset of sections
   --repeat N    run each section N times and report the per-row median
                 us_per_call (derived fields from the first run)
+  --policy MODE kernel policy mode the sweep runs under (default "tuned")
 
 Whenever the table1 section runs, its rows are also persisted to
 `BENCH_table1.json` at the repo root — the perf-trajectory record the CI
@@ -22,16 +29,16 @@ is printed for the fused kernel path.
 from __future__ import annotations
 
 import argparse
-import inspect
 import json
-import statistics
 import sys
 import time
-import traceback
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.cluster import BenchProgram, Cluster  # noqa: E402
+from repro.cluster.policy import MODES  # noqa: E402
 
 from benchmarks import (bench_fig4_interconnect, bench_fig5_hybrid,  # noqa: E402
                         bench_fig13_scaling, bench_fig14_breakdown,
@@ -47,42 +54,6 @@ MODULES = [
     ("fig15", bench_fig15_double_buffer),
     ("fig16", bench_fig16_energy),
 ]
-
-
-def _call_main(mod, smoke: bool) -> list[str]:
-    if "smoke" in inspect.signature(mod.main).parameters:
-        return mod.main(smoke=smoke)
-    return mod.main()
-
-
-def _parse_row(line: str) -> dict:
-    name, us, derived = line.split(",", 2)
-    try:
-        us_val = float(us)
-    except ValueError:
-        us_val = None
-    return {"name": name, "us_per_call": us_val, "derived": derived}
-
-
-def _median_lines(runs: list[list[str]]) -> list[str]:
-    """Per-row median us_per_call across repeats (first run's derived)."""
-    if len(runs) == 1:
-        return runs[0]
-    by_name: dict[str, list[float]] = {}
-    for run in runs:
-        for line in run:
-            r = _parse_row(line)
-            if r["us_per_call"] is not None:
-                by_name.setdefault(r["name"], []).append(r["us_per_call"])
-    out = []
-    for line in runs[0]:
-        r = _parse_row(line)
-        if r["us_per_call"] is None or r["name"] not in by_name:
-            out.append(line)
-            continue
-        med = statistics.median(by_name[r["name"]])
-        out.append(f"{r['name']},{med:.1f},{r['derived']}")
-    return out
 
 
 def _fused_comparison_line(rows: list[dict]) -> str | None:
@@ -108,7 +79,8 @@ def _persist_table1(results: dict, repeat: int) -> Path | None:
     path = Path(__file__).resolve().parents[1] / "BENCH_table1.json"
     path.write_text(json.dumps(
         {"smoke": results["smoke"], "timestamp": results["timestamp"],
-         "repeat": repeat, "rows": section["rows"]}, indent=2))
+         "repeat": repeat, "policy": results["policy"],
+         "rows": section["rows"]}, indent=2))
     return path
 
 
@@ -122,44 +94,26 @@ def main(argv: list[str] | None = None) -> None:
                     help="comma-separated section subset (e.g. table1,fig4)")
     ap.add_argument("--repeat", type=int, default=1,
                     help="median-of-N timing: run each section N times")
+    ap.add_argument("--policy", default="tuned", choices=MODES,
+                    help="kernel policy mode the sweep runs under")
     args = ap.parse_args(argv)
     if args.repeat < 1:
         ap.error("--repeat must be >= 1")
 
-    only = set(args.only.split(",")) if args.only else None
+    only = tuple(args.only.split(",")) if args.only else ()
     if only:
-        unknown = only - {name for name, _ in MODULES}
+        unknown = set(only) - {name for name, _ in MODULES}
         if unknown:
             ap.error(f"unknown section(s) {sorted(unknown)}; "
                      f"available: {[n for n, _ in MODULES]}")
+
+    cluster = Cluster(policy=args.policy)           # kernel-only cluster
+    program = cluster.compile(BenchProgram(sections=only, smoke=args.smoke,
+                                           repeat=args.repeat))
     print("name,us_per_call,derived")
-    failed = []
-    results: dict = {"smoke": args.smoke, "timestamp": time.time(),
-                     "sections": {}}
-    for name, mod in MODULES:
-        if only is not None and name not in only:
-            continue
-        t0 = time.perf_counter()
-        try:
-            lines = _median_lines(
-                [_call_main(mod, args.smoke) for _ in range(args.repeat)])
-            for line in lines:
-                print(line)
-            results["sections"][name] = {
-                "status": "ok",
-                "seconds": time.perf_counter() - t0,
-                "rows": [_parse_row(l) for l in lines],
-            }
-        except Exception as e:
-            failed.append(name)
-            traceback.print_exc()
-            results["sections"][name] = {
-                "status": "error",
-                "seconds": time.perf_counter() - t0,
-                "error": f"{type(e).__name__}: {e}",
-            }
-        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
-              file=sys.stderr)
+    results = program.run(MODULES)
+    results["timestamp"] = time.time()
+    failed = results.pop("failed")
     table1 = results["sections"].get("table1")
     if table1 and table1["status"] == "ok":
         cmp_line = _fused_comparison_line(table1["rows"])

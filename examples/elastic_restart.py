@@ -1,6 +1,7 @@
 """Elastic restart: survive a node failure and resume on a smaller mesh.
 
-Simulates the 1000-node failure path end-to-end on CPU:
+Simulates the 1000-node failure path end-to-end on CPU, driving the
+compiled step of a Cluster `TrainProgram` by hand:
   1. train on mesh A, async-checkpointing;
   2. "lose a host" (Coordinator event) mid-run -> preemption checkpoint;
   3. re-plan the mesh for the survivors (model axis kept, data axis shrunk);
@@ -20,9 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.cluster import Cluster, TrainProgram
 from repro.core import compat
-from repro.configs import get
-from repro.models import steps
 from repro.runtime.coordination import Coordinator, replan_mesh_shape
 
 CKPT = "/tmp/repro-elastic"
@@ -39,10 +39,15 @@ def make_batches(cfg, seq, start):
 
 
 def main():
-    cfg = get("qwen3-14b-smoke")
     seq = 32
-    state = steps.init_train_state(cfg, jax.random.PRNGKey(1), max_seq=seq)
-    train_step = jax.jit(steps.make_train_step(cfg))
+    cluster = Cluster("qwen3-14b-smoke")
+    cfg = cluster.arch
+    # compile once; drive the program's step function by hand so the
+    # failure/restore choreography stays explicit
+    program = cluster.compile(TrainProgram(num_steps=10, seq=seq, seed=1,
+                                           checkpoint_dir=CKPT))
+    state, _ = program.init_state(seed=1)
+    train_step = program.step
     mgr = CheckpointManager(CKPT, keep=2)
 
     # phase 1: run on the "big" mesh, checkpoint every 3 steps

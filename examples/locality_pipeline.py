@@ -5,6 +5,10 @@ through the kernel layer, and demonstrates the p_local effect: the same
 logical computation placed with SEQUENTIAL vs INTERLEAVED region policies,
 with the traffic difference predicted by the interconnect model.
 
+The kernel call goes through a kernel-only `Cluster` (no model attached):
+its scoped `KernelPolicy` picks the blocking (autotuned, registry-cached)
+and records the dispatch traffic.
+
     PYTHONPATH=src python examples/locality_pipeline.py
 """
 
@@ -15,8 +19,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.cluster import Cluster
 from repro.core.interconnect import TOP_H, TopologyModel
 from repro.kernels import ops
 
@@ -49,10 +53,14 @@ def main():
           f"{spread_after} (full range = 255)")
     assert spread_after > spread_before
 
-    # follow with the paper's 2dconv on the equalized image (kernel layer)
+    # follow with the paper's 2dconv on the equalized image, dispatched
+    # through a kernel-only Cluster's policy (autotuned blocking on miss)
+    cluster = Cluster()
     w = jnp.asarray([[1, 2, 1], [2, 4, 2], [1, 2, 1]], jnp.float32) / 16
-    smoothed = ops.conv2d_3x3(eq.astype(jnp.float32), w)
-    print(f"smoothed via Pallas conv2d: mean {float(smoothed.mean()):.1f}")
+    with cluster.policy("tuned") as pol:
+        smoothed = ops.tuned_call("conv2d", eq.astype(jnp.float32), w)
+    print(f"smoothed via Pallas conv2d: mean {float(smoothed.mean()):.1f} "
+          f"(policy={pol.mode}, stats={dict(pol.stats)})")
 
     # the p_local story on this workload: the LUT-apply phase is fully
     # local (SEQUENTIAL region); the histogram reduction is all-remote

@@ -1,8 +1,8 @@
-"""Quickstart: the framework in ~60 lines.
+"""Quickstart: the framework in ~50 lines, through the Cluster façade.
 
-Builds a reduced qwen3-family model, places it with the hybrid addressing
-plan (weights INTERLEAVED, state SEQUENTIAL), runs a few train steps, and
-decodes — the whole public API surface.
+One `Cluster` owns the architecture, the mesh, the hybrid addressing plan
+(weights INTERLEAVED, state SEQUENTIAL), and the kernel policy; programs
+compiled on it train and decode — the whole public API surface.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,45 +12,34 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax
-import jax.numpy as jnp
+from repro.cluster import Cluster, ServeProgram, TrainProgram
 
-from repro.configs import get
-from repro.core import addressing
-from repro.core import compat
-from repro.models import steps
-
-# 1. pick an architecture (any of the ten; -smoke = reduced same-family)
-cfg = get("qwen3-14b-smoke")
+# 1. one object for the substrate: arch + mesh + addressing + kernel policy
+cluster = Cluster("qwen3-14b-smoke")
+cfg = cluster.arch
 print(f"arch={cfg.name}: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab}")
+print(f"kernel policy: {cluster.kernel_policy.mode}")
 
-# 2. the hybrid addressing plan: logical axes -> mesh placement
-mesh = compat.make_mesh((1, 1), ("data", "model"))
-rules = addressing.default_rules(mesh)
-print("ffn weight spec:", rules.spec_for(("embed", "ffn"), (64, 128), mesh),
-      "(INTERLEAVED region)")
-print("batch spec:     ", rules.spec_for(("batch", "seq"), (4, 32), mesh),
-      "(SEQUENTIAL region)")
+# 2. the hybrid addressing plan: logical axes -> mesh placement, per param
+plan = cluster.plan()
+ffn = next(v for k, v in plan.items() if k.endswith("w_gate"))
+norm = next(v for k, v in plan.items() if k == "ln_f")
+print(f"ffn weight {ffn['shape']}: {ffn['spec']} ({ffn['region']})")
+print(f"final norm {norm['shape']}: {norm['spec']} ({norm['region']})")
 
-# 3. train a few steps on random tokens
-key = jax.random.PRNGKey(0)
-S = 32
-state = steps.init_train_state(cfg, key, max_seq=S)
-train_step = jax.jit(steps.make_train_step(cfg))
-batch = {"tokens": jax.random.randint(key, (4, S), 0, cfg.vocab),
-         "labels": jax.random.randint(key, (4, S), 0, cfg.vocab)}
-for i in range(5):
-    state, metrics = train_step(state, batch)
-    print(f"step {i}: loss={float(metrics['loss']):.4f} "
-          f"gnorm={float(metrics['grad_norm']):.3f}")
+# 3. train a few steps on the synthetic stream
+train = cluster.compile(TrainProgram(num_steps=5, batch=4, seq=32,
+                                     log_every=1,
+                                     checkpoint_dir="/tmp/repro-quickstart"))
+report = train.run()
+for m in report["metrics"]:
+    print(f"step {m['step']}: loss={m['loss']:.4f}")
 
-# 4. greedy decode with a KV cache
-cache = steps.init_cache(cfg, 4, S)
-decode = jax.jit(steps.make_decode_step(cfg, max_seq=S))
-tok = jnp.zeros((4, 1), jnp.int32)
-out = [tok]
-for pos in range(8):
-    cache, tok = decode(state["params"], cache,
-                        {"tokens": tok, "pos": jnp.asarray(pos, jnp.int32)})
-    out.append(tok)
-print("decoded:", jnp.concatenate(out, axis=1)[0].tolist())
+# 4. greedy decode with a KV cache, reusing the trained params
+serve = cluster.compile(ServeProgram(batch=4, max_seq=32, max_new=8))
+out = serve.run(params=report["params"])
+print("decoded:", out["tokens"][0].tolist())
+
+# 5. every program self-describes: spec + policy + compile-cache traffic
+print("program report:", {k: train.report()[k]
+                          for k in ("kind", "arch", "mesh", "policy")})

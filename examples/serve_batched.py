@@ -1,5 +1,9 @@
 """Batched serving: decode a batch of requests against a shared KV cache.
 
+A thin wrapper over the Cluster façade: one `ServeProgram` handles the
+token-by-token prompt ingest (continuous-batching style) and the greedy
+generation loop, with optional EOS-based early stop per slot.
+
     PYTHONPATH=src python examples/serve_batched.py --batch 8 --new 32
 """
 
@@ -10,12 +14,8 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get
-from repro.models import steps
-from repro.runtime import ServeLoop
+from repro.cluster import Cluster, ServeProgram
 
 
 def main():
@@ -23,32 +23,28 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--new", type=int, default=32)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a slot once it emits this token id")
     args = ap.parse_args()
 
-    cfg = get(args.arch + "-smoke")
-    max_seq = 64
-    key = jax.random.PRNGKey(0)
-    params = steps.init_params(cfg, key, max_seq=max_seq)
+    cluster = Cluster(args.arch + "-smoke")
+    cfg = cluster.arch
+    program = cluster.compile(ServeProgram(batch=args.batch, max_seq=64,
+                                           max_new=args.new,
+                                           eos_id=args.eos_id))
 
-    # prefill the prompt token-by-token (continuous-batching style ingest)
-    prompt = jax.random.randint(key, (args.batch, 8), 0, cfg.vocab)
-    cache = steps.init_cache(cfg, args.batch,
-                             steps.decode_cache_len(cfg, max_seq))
-    decode = jax.jit(steps.make_decode_step(cfg, max_seq=max_seq))
-    tok = None
-    for t in range(prompt.shape[1]):
-        cache, tok = decode(params, cache,
-                            {"tokens": prompt[:, t:t + 1],
-                             "pos": jnp.asarray(t, jnp.int32)})
-
-    serve = ServeLoop(decode, params, cache, batch_size=args.batch)
-    out = serve.generate(np.asarray(tok), max_new=args.new,
-                         start_pos=prompt.shape[1])
-    stats = serve.stats()
-    print(f"arch={cfg.name} batch={args.batch} generated {args.new} tokens/slot")
+    prompt = jax.random.randint(jax.random.PRNGKey(0), (args.batch, 8), 0,
+                                cfg.vocab)
+    out = program.run(prompt=prompt)
+    stats = out["stats"]
+    print(f"arch={cfg.name} batch={args.batch} generated {args.new} "
+          f"tokens/slot")
     print(f"p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms "
           f"{stats['tokens_per_s_per_slot']:.1f} tok/s/slot")
-    print("sample:", out[0][:16].tolist())
+    if "finished_slots" in stats:
+        print(f"finished at eos: {stats['finished_slots']}/{args.batch}, "
+              f"emitted={stats['emitted_per_slot']}")
+    print("sample:", out["tokens"][0][:16].tolist())
 
 
 if __name__ == "__main__":

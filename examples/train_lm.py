@@ -1,8 +1,10 @@
 """End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
 
-Composes every substrate layer: splitter/distributor data feed with
-double-buffered prefetch (the DMA analogue), region-planned shardings,
-compiled train step, async checkpointing with resume, straggler detection.
+A thin wrapper over the Cluster façade. The `TrainProgram` composes every
+substrate layer: splitter/distributor data feed with double-buffered
+prefetch (the DMA analogue — `double_buffer=True`), region-planned
+shardings, compiled train step, async checkpointing with resume, straggler
+detection.
 
     PYTHONPATH=src python examples/train_lm.py --steps 300
 """
@@ -15,16 +17,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax
-import numpy as np
-
+from repro.cluster import Cluster, TrainProgram
 from repro.configs import get
-from repro.core import addressing
-from repro.core import compat
-from repro.data import DoubleBufferedFeed, Distributor, Splitter, SyntheticLMStream
-from repro.data.pipeline import BatchSpec
-from repro.models import steps
-from repro.runtime import TrainLoop, TrainLoopConfig
 
 
 def main():
@@ -45,34 +39,17 @@ def main():
     else:
         cfg = dataclasses.replace(
             get("xlstm-125m"), n_layers=8, vocab=32768, attn_chunk=128)
-    n = cfg.n_params()
-    print(f"model: {cfg.name} variant, {n / 1e6:.1f}M params")
+    print(f"model: {cfg.name} variant, {cfg.n_params() / 1e6:.1f}M params")
 
-    mesh = compat.make_mesh((1, 1), ("data", "model"))
-    rules = addressing.default_rules(mesh, overrides=cfg.rules_overrides)
+    cluster = Cluster(cfg)          # a custom ArchConfig works directly
+    program = cluster.compile(TrainProgram(
+        num_steps=args.steps, batch=args.batch, seq=args.seq,
+        checkpoint_dir=args.ckpt, checkpoint_every=100,
+        log_every=max(min(25, args.steps // 4), 1), warmup=20,
+        double_buffer=True, resume=True))
 
-    state = steps.init_train_state(cfg, jax.random.PRNGKey(0),
-                                   max_seq=args.seq)
-    train_step = jax.jit(steps.make_train_step(
-        cfg, schedule_kwargs={"warmup": 20, "total": args.steps}),
-        donate_argnums=0)
-
-    spec = BatchSpec(args.batch, args.seq, cfg.vocab)
-    stream = SyntheticLMStream(spec, seed=0)
-    dist = Distributor(mesh, Splitter(mesh, ("data",)))
-    sh = jax.sharding.NamedSharding(
-        mesh, rules.spec_for(("batch", "seq"), (args.batch, args.seq), mesh))
-    feed = DoubleBufferedFeed(lambda s: dist.materialize(stream, s, sh),
-                              depth=2)
-
-    loop = TrainLoop(
-        TrainLoopConfig(total_steps=args.steps, checkpoint_every=100,
-                        log_every=max(min(25, args.steps // 4), 1),
-                        checkpoint_dir=args.ckpt),
-        train_step, state, feed)
     t0 = time.time()
-    report = loop.run()
-    feed.close()
+    report = program.run()
 
     losses = [m["loss"] for m in report["metrics"]]
     print(f"\n{report['final_step']} steps in {time.time() - t0:.0f}s "

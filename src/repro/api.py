@@ -4,95 +4,67 @@ MemPool offers bare-metal C (full control), OpenMP (fork-join convenience),
 and Halide (declarative). This framework mirrors that:
 
   bare-metal : repro.models.steps + explicit PartitionSpecs / shard_map
-  OpenMP     : THIS module — one-call train/serve with the region plan applied
+  OpenMP     : repro.cluster — Cluster + program specs; THIS module keeps
+               the legacy one-call train/serve/plan signatures as thin
+               deprecating shims over it
   Halide     : the config-driven launcher (repro.launch.train CLI)
+
+New code should build a `repro.cluster.Cluster` and compile programs on it;
+these wrappers exist so old call sites keep working with identical return
+shapes.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Iterator
+import warnings
+from typing import Any
 
 import jax
 
-from repro.configs import get
-from repro.core import addressing, compat
-from repro.data import Distributor, Splitter, SyntheticLMStream
-from repro.data.pipeline import BatchSpec
-from repro.models import steps
-from repro.runtime import ServeLoop, TrainLoop, TrainLoopConfig
+from repro.cluster import Cluster, ServeProgram, TrainProgram
+
+_UNSET = object()
 
 
 def plan(arch: str, mesh: jax.sharding.Mesh) -> dict[str, Any]:
     """The hybrid addressing plan for an architecture on a mesh:
-    {tree path: (logical axes, PartitionSpec, region)} for every parameter."""
-    cfg = get(arch)
-    rules = addressing.default_rules(mesh, overrides=cfg.rules_overrides)
-    p_sds, p_log = steps.abstract_params(cfg)
-    out = {}
-    for (path, sds), (_, logical) in zip(
-            jax.tree_util.tree_flatten_with_path(p_sds)[0],
-            jax.tree_util.tree_flatten_with_path(
-                p_log, is_leaf=lambda x: isinstance(x, tuple))[0]):
-        key = "/".join(str(getattr(k, "key", k)) for k in path)
-        spec = rules.spec_for(logical, sds.shape, mesh)
-        region = ("REPLICATED" if not [s for s in spec if s] else
-                  "INTERLEAVED" if any(n in ("embed", "ffn", "heads",
-                                             "kv_heads", "vocab", "expert")
-                                       for n in logical if n) else
-                  "SEQUENTIAL")
-        out[key] = {"logical": logical, "spec": spec, "region": region,
-                    "shape": sds.shape}
-    return out
+    {tree path: (logical axes, PartitionSpec, region)} for every parameter.
+
+    Shim over `Cluster(arch, mesh).plan()`.
+    """
+    return Cluster(arch, mesh).plan()
 
 
-def train(arch: str, *, steps_: int = 100, batch: int = 4, seq: int = 128,
-          smoke: bool = True, checkpoint_dir: str = "/tmp/repro-api-train",
+def train(arch: str, *, num_steps: int | None = None, steps_=_UNSET,
+          batch: int = 4, seq: int = 128, smoke: bool = True,
+          checkpoint_dir: str = "/tmp/repro-api-train",
           mesh: jax.sharding.Mesh | None = None, seed: int = 0) -> dict:
-    """One-call training on the synthetic stream. Returns the loop report."""
-    cfg = get(arch + ("-smoke" if smoke else ""))
-    mesh = mesh or compat.make_mesh((jax.device_count(), 1),
-                                    ("data", "model"))
-    rules = addressing.default_rules(mesh, overrides=cfg.rules_overrides)
+    """One-call training on the synthetic stream. Returns the loop report.
 
-    state = steps.init_train_state(cfg, jax.random.PRNGKey(seed), max_seq=seq)
-    train_step = jax.jit(steps.make_train_step(
-        cfg, schedule_kwargs={"warmup": max(steps_ // 10, 1),
-                              "total": steps_}), donate_argnums=0)
-
-    stream = SyntheticLMStream(BatchSpec(batch, seq, cfg.vocab), seed=seed)
-    dist = Distributor(mesh, Splitter(mesh, ("data",)))
-    sh = jax.sharding.NamedSharding(
-        mesh, rules.spec_for(("batch", "seq"), (batch, seq), mesh))
-
-    def batches() -> Iterator[dict]:
-        step = 0
-        while True:
-            yield dist.materialize(stream, step, sh)
-            step += 1
-
-    loop = TrainLoop(
-        TrainLoopConfig(total_steps=steps_,
-                        checkpoint_every=max(steps_ // 2, 1),
-                        log_every=max(steps_ // 10, 1),
-                        checkpoint_dir=checkpoint_dir),
-        train_step, state, batches())
-    report = loop.run(start_step=0)
-    report["params"] = loop.state["params"]
-    return report
+    Shim over `Cluster(...).compile(TrainProgram(...)).run()`. `steps_` is a
+    deprecated alias for `num_steps` (kept for one release).
+    """
+    if steps_ is not _UNSET:
+        warnings.warn("api.train(steps_=...) is deprecated; use num_steps=",
+                      DeprecationWarning, stacklevel=2)
+        if num_steps is None:
+            num_steps = steps_
+    if num_steps is None:
+        num_steps = 100
+    cluster = Cluster(arch + ("-smoke" if smoke else ""), mesh)
+    program = cluster.compile(TrainProgram(
+        num_steps=num_steps, batch=batch, seq=seq, seed=seed,
+        checkpoint_dir=checkpoint_dir))
+    return program.run()
 
 
 def serve(arch: str, params=None, *, batch: int = 4, max_seq: int = 64,
           max_new: int = 16, smoke: bool = True, seed: int = 0) -> dict:
-    """One-call batched greedy decoding. Returns tokens + latency stats."""
-    import numpy as np
+    """One-call batched greedy decoding. Returns tokens + latency stats.
 
-    cfg = get(arch + ("-smoke" if smoke else ""))
-    if params is None:
-        params = steps.init_params(cfg, jax.random.PRNGKey(seed),
-                                   max_seq=max_seq)
-    cache = steps.init_cache(cfg, batch, steps.decode_cache_len(cfg, max_seq))
-    decode = jax.jit(steps.make_decode_step(cfg, max_seq=max_seq))
-    loop = ServeLoop(decode, params, cache, batch_size=batch)
-    out = loop.generate(np.zeros((batch, 1), np.int32), max_new=max_new)
-    return {"tokens": out, "stats": loop.stats()}
+    Shim over `Cluster(...).compile(ServeProgram(...)).run(params)`.
+    """
+    cluster = Cluster(arch + ("-smoke" if smoke else ""))
+    program = cluster.compile(ServeProgram(
+        batch=batch, max_seq=max_seq, max_new=max_new, seed=seed))
+    return program.run(params=params)

@@ -1,0 +1,206 @@
+"""KernelPolicy — one object steering every kernel-dispatch decision.
+
+MemPool programs one substrate through several runtimes; which kernel body
+actually runs (hand-tuned blocking, fused producer-consumer kernel, jnp
+reference, interpreter) used to be steered by two side channels: a
+fused-route bool threaded through `ArchConfig` into the model files, and a
+backend probe buried in `kernels/ops.py`. Both now live here:
+
+  KernelPolicy(mode="tuned" | "fused" | "reference" | "interpret",
+               overrides={op_name: mode_or_blocks})
+
+* ``tuned``     — Pallas kernels with autotuned (registry-cached) blockings;
+                  autotune-on-miss. The default.
+* ``fused``     — same, plus the model stack takes the fused
+                  producer-consumer route (kernels/fused.py) wherever a
+                  block's norm kind allows it.
+* ``reference`` — the pure-jnp oracles from kernels/ref.py.
+* ``interpret`` — Pallas bodies forced through the interpreter even on TPU
+                  (off-TPU backends always interpret, whatever the mode).
+
+``overrides`` refines single ops: a mode string re-routes that op only
+(``{"matmul": "reference"}``), a block dict pins its blocking for
+``tuned_call`` (``{"matmul": {"bm": 64, "bn": 64, "bk": 64}}``).
+
+The active policy is an explicitly scoped stack: ``with use_policy(p): ...``
+(or ``with cluster.policy(...)``). Dispatch sites read ``current_policy()``
+at trace time, so a policy is baked into whatever jit trace it was active
+under — exactly like the config bool it replaces, but in one place. With no
+scope active, the default policy applies; ``REPRO_INTERPRET=1`` in the
+environment turns the default into ``interpret`` mode (the old env path),
+and ``REPRO_KERNEL_POLICY`` picks any default mode outright.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Any, Iterator, Mapping
+
+MODES = ("tuned", "fused", "reference", "interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Kernel-selection policy: a global mode plus per-op overrides.
+
+    ``stats`` is a mutable per-instance counter dict (ref_calls,
+    pallas_calls, tune_hits, tune_misses, block_overrides) filled in by the
+    dispatch sites — excluded from equality so two policies with the same
+    knobs compare equal regardless of traffic.
+    """
+
+    mode: str = "tuned"
+    overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    stats: dict = dataclasses.field(default_factory=dict, compare=False,
+                                    repr=False)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown policy mode {self.mode!r}; "
+                             f"expected one of {MODES}")
+        for op, v in self.overrides.items():
+            if isinstance(v, str):
+                if v not in MODES:
+                    raise ValueError(f"override for {op!r}: unknown mode "
+                                     f"{v!r}; expected one of {MODES}")
+            elif not isinstance(v, Mapping):
+                raise TypeError(f"override for {op!r} must be a mode string "
+                                f"or a block dict, got {type(v).__name__}")
+
+    # -- per-op resolution ----------------------------------------------------
+    def mode_for(self, op: str) -> str:
+        """The mode governing `op`: its string override, else the global."""
+        o = self.overrides.get(op)
+        return o if isinstance(o, str) else self.mode
+
+    def blocks_for(self, op: str) -> dict | None:
+        """Pinned blocking for `op` (a dict override), or None to autotune."""
+        o = self.overrides.get(op)
+        return dict(o) if isinstance(o, Mapping) else None
+
+    def interpret_for(self, op: str) -> bool:
+        """Should `op`'s Pallas body run interpreted? Forced by the
+        ``interpret`` mode; always true off-TPU (numerics-identical, which is
+        what the allclose tests against ref.py verify)."""
+        if self.mode_for(op) == "interpret":
+            return True
+        import jax
+        return jax.default_backend() != "tpu"
+
+    @property
+    def fused(self) -> bool:
+        """Does the model stack take the fused producer-consumer route?"""
+        return self.mode == "fused"
+
+    # -- dispatch (the tuned_call body) ---------------------------------------
+    def call(self, name: str, *operands, **kwargs):
+        """Run kernel `name` under this policy: reference short-circuit,
+        pinned blocks, or autotuned (registry-cached, tune-on-miss) blocks.
+
+        This is the single place fused/tuned/reference selection and
+        autotune-on-miss live; ``ops.tuned_call`` delegates here.
+        """
+        from repro.configs import registry
+        from repro.kernels import ops, pipeline
+
+        desc = ops.OPS[name]
+        if self.mode_for(name) == "reference":
+            self.bump("ref_calls")
+            return desc.reference(*operands, **kwargs)
+        blocks = self.blocks_for(name)
+        if blocks is None:
+            shapes = desc.shapes(*operands)
+            dtype_bytes = operands[desc.streamed_operand].dtype.itemsize
+            key = pipeline.shape_key(shapes, dtype_bytes)
+            rec = registry.get_kernel_tune(name, key)
+            if rec is None:
+                self.bump("tune_misses")
+                blocks = dict(pipeline.autotune(
+                    name, shapes, dtype_bytes=dtype_bytes).blocks)
+            else:
+                self.bump("tune_hits")
+                blocks = dict(rec.blocks)
+        else:
+            self.bump("block_overrides")
+        return desc.wrapper(*operands, **blocks, **kwargs)
+
+    # -- bookkeeping ----------------------------------------------------------
+    def bump(self, key: str) -> None:
+        self.stats[key] = self.stats.get(key, 0) + 1
+
+    def describe(self) -> dict:
+        """JSON-able snapshot: knobs + traffic counters (for bench records,
+        program reports, and compile-cache fingerprints)."""
+        return {
+            "mode": self.mode,
+            "overrides": {k: (v if isinstance(v, str) else dict(v))
+                          for k, v in sorted(self.overrides.items())},
+            "stats": dict(self.stats),
+        }
+
+    def fingerprint(self) -> str:
+        """Stable key component (knobs only — stats excluded)."""
+        d = self.describe()
+        d.pop("stats")
+        return repr(sorted((k, repr(v)) for k, v in d.items()))
+
+
+# ----------------------------------------------------------------------------
+# The active-policy stack
+# ----------------------------------------------------------------------------
+
+_STACK: list[KernelPolicy] = []
+
+
+def _env_truthy(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() not in ("", "0", "false")
+
+
+def default_policy() -> KernelPolicy:
+    """The ambient policy when no scope is active. ``REPRO_KERNEL_POLICY``
+    selects the mode; ``REPRO_INTERPRET=1`` (the legacy env path) maps to
+    ``interpret``."""
+    mode = os.environ.get("REPRO_KERNEL_POLICY", "").strip()
+    if not mode:
+        mode = "interpret" if _env_truthy("REPRO_INTERPRET") else "tuned"
+    return KernelPolicy(mode=mode)
+
+
+def current_policy() -> KernelPolicy:
+    return _STACK[-1] if _STACK else default_policy()
+
+
+def as_policy(p: "KernelPolicy | str | None") -> KernelPolicy:
+    """Coerce a policy spec: a KernelPolicy, a bare mode string, or None
+    (-> the environment-derived default)."""
+    if isinstance(p, KernelPolicy):
+        return p
+    if p is None:
+        return default_policy()
+    if isinstance(p, str):
+        return KernelPolicy(mode=p)
+    raise TypeError(f"cannot make a KernelPolicy from {type(p).__name__}")
+
+
+@contextlib.contextmanager
+def use_policy(p: "KernelPolicy | str | None") -> Iterator[KernelPolicy]:
+    """Scope `p` as the active policy (nests; innermost wins)."""
+    pol = as_policy(p)
+    _STACK.append(pol)
+    try:
+        yield pol
+    finally:
+        _STACK.pop()
+
+
+@contextlib.contextmanager
+def scoped(p: "KernelPolicy | str | None") -> Iterator[KernelPolicy]:
+    """Like use_policy, but None means *inherit the ambient policy* rather
+    than reset to the default — the step-factory helper."""
+    if p is None:
+        yield current_policy()
+    else:
+        with use_policy(p) as pol:
+            yield pol

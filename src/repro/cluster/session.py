@@ -1,0 +1,562 @@
+"""Cluster/Session façade — one object owning mesh, addressing, kernel
+policy, and compiled programs.
+
+MemPool's programmability claim is that 256 cores with one shared L1 view
+are driven through multiple runtimes over a *single* substrate; the
+follow-up "Flavors" work configures that one substrate per workload. This
+module is the substrate object for the TPU translation:
+
+    cluster = Cluster("qwen3-14b-smoke")            # arch + mesh + rules
+    with cluster.policy("fused"):                   # kernel policy scope
+        train = cluster.compile(TrainProgram(num_steps=100))
+    report = train.run()                            # .plan() / .report() too
+
+`Cluster` owns the ArchConfig, the mesh, the hybrid-addressing rules, the
+KERNEL_TUNES view, and a CompileCache; `cluster.compile(spec)` turns a
+program spec (TrainProgram / ServeProgram / DryRunProgram / BenchProgram)
+into a Program with `.run()`, `.plan()`, and `.report()`. Every entrypoint
+(`repro.api`, `launch/train.py`, `launch/dryrun.py`, `benchmarks/run.py`,
+the examples) is a thin wrapper over these objects, so later subsystems
+(continuous batching, multi-cluster, backend selection) plug into one
+place instead of five.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster import cells
+from repro.cluster.policy import KernelPolicy, as_policy, use_policy
+from repro.configs import get as get_arch
+from repro.configs.registry import (ArchConfig, SHAPES, cell_supported,
+                                    kernel_tunes)
+from repro.core import addressing, compat
+from repro.models import steps
+from repro.runtime import CompileCache, ServeLoop, TrainLoop, TrainLoopConfig
+
+
+# ----------------------------------------------------------------------------
+# Program specs — frozen descriptions, compiled by Cluster.compile
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainProgram:
+    """A training run on the synthetic stream, region-planned on the mesh."""
+
+    num_steps: int = 100
+    batch: int = 4
+    seq: int = 128
+    seed: int = 0
+    checkpoint_dir: str = "/tmp/repro-train"
+    checkpoint_every: int | None = None    # None -> max(num_steps // 2, 1)
+    log_every: int | None = None           # None -> max(num_steps // 10, 1)
+    warmup: int | None = None              # None -> max(num_steps // 10, 1)
+    resume: bool = False                   # restore latest checkpoint first
+    double_buffer: bool = False            # prefetch feed (DMA analogue)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeProgram:
+    """Batched greedy decoding against a KV cache."""
+
+    batch: int = 4
+    max_seq: int = 64
+    max_new: int = 16
+    seed: int = 0
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DryRunProgram:
+    """Lower + compile one (arch x shape) cell on this cluster's mesh and
+    extract memory/cost/collective analysis — no allocation."""
+
+    shape: str = "train_4k"
+    fsdp_gather: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchProgram:
+    """The paper-figure benchmark sweep, run under this cluster's policy."""
+
+    sections: tuple[str, ...] = ()         # () -> every module offered
+    smoke: bool = False
+    repeat: int = 1
+
+
+# ----------------------------------------------------------------------------
+# Cluster
+# ----------------------------------------------------------------------------
+
+
+class Cluster:
+    """The substrate: arch + mesh + addressing + kernel policy + programs.
+
+    `arch` may be an arch name (``"qwen3-14b-smoke"``), an ArchConfig, or
+    None for a kernel-only cluster (policy + tunes + bench programs, no
+    model). `mesh` defaults to all local devices on a (data, model) mesh.
+    """
+
+    def __init__(self, arch: "str | ArchConfig | None" = None, mesh=None, *,
+                 policy: "KernelPolicy | str | None" = None,
+                 rules_overrides=None):
+        self.arch: ArchConfig | None = (
+            get_arch(arch) if isinstance(arch, str) else arch)
+        self.mesh = mesh if mesh is not None else compat.make_mesh(
+            (jax.device_count(), 1), ("data", "model"))
+        if rules_overrides is None:
+            rules_overrides = (self.arch.rules_overrides if self.arch
+                               else ())
+        self.rules = addressing.default_rules(self.mesh,
+                                              overrides=rules_overrides)
+        self._policy = as_policy(policy)
+        self.compile_cache = CompileCache()
+
+    # -- kernel policy --------------------------------------------------------
+    @property
+    def kernel_policy(self) -> KernelPolicy:
+        return self._policy
+
+    def policy(self, policy: "KernelPolicy | str | None" = None, **kwargs):
+        """Scope a kernel policy on this cluster::
+
+            with cluster.policy("fused"):              # a mode string
+            with cluster.policy(mode="tuned", overrides={"matmul": "reference"}):
+
+        Inside the block the policy is both the ambient one (kernel dispatch
+        reads it) and the cluster default captured by `compile`.
+        """
+        if policy is None:
+            pol = KernelPolicy(**kwargs) if kwargs else self._policy
+        else:
+            pol = as_policy(policy)
+            if kwargs:
+                pol = dataclasses.replace(pol, **kwargs)
+        return _PolicyScope(self, pol)
+
+    def tunes(self, kernel: str | None = None) -> list:
+        """This cluster's view of the autotune records (KERNEL_TUNES)."""
+        recs = kernel_tunes()
+        if kernel is not None:
+            recs = [r for r in recs if r.kernel == kernel]
+        return recs
+
+    # -- addressing plan ------------------------------------------------------
+    def plan(self) -> dict[str, Any]:
+        """The hybrid addressing plan for this cluster's arch on its mesh:
+        {tree path: {logical, spec, region, shape}} for every parameter."""
+        cfg = self._require_arch("plan")
+        p_sds, p_log = steps.abstract_params(cfg)
+        out = {}
+        for (path, sds), (_, logical) in zip(
+                jax.tree_util.tree_flatten_with_path(p_sds)[0],
+                jax.tree_util.tree_flatten_with_path(
+                    p_log, is_leaf=lambda x: isinstance(x, tuple))[0]):
+            key = "/".join(str(getattr(k, "key", k)) for k in path)
+            spec = self.rules.spec_for(logical, sds.shape, self.mesh)
+            region = ("REPLICATED" if not [s for s in spec if s] else
+                      "INTERLEAVED" if any(n in ("embed", "ffn", "heads",
+                                                 "kv_heads", "vocab",
+                                                 "expert")
+                                           for n in logical if n) else
+                      "SEQUENTIAL")
+            out[key] = {"logical": logical, "spec": spec, "region": region,
+                        "shape": sds.shape}
+        return out
+
+    def state_shardings(self, tree_sds, tree_logical):
+        return cells.shardings_for(tree_sds, tree_logical, self.mesh,
+                                   self.rules)
+
+    # -- compilation ----------------------------------------------------------
+    def compile(self, spec) -> "Program":
+        """Program spec -> compiled Program, memoized in the compile cache
+        keyed on (spec, arch, mesh, policy knobs)."""
+        builders = {TrainProgram: CompiledTrain, ServeProgram: CompiledServe,
+                    DryRunProgram: CompiledDryRun, BenchProgram: CompiledBench}
+        try:
+            builder = builders[type(spec)]
+        except KeyError:
+            raise TypeError(f"Cluster.compile expects a program spec, got "
+                            f"{type(spec).__name__}") from None
+        key = (type(spec).__name__, spec,
+               self.arch.name if self.arch else None,
+               tuple(self.mesh.shape.items())
+               if hasattr(self.mesh.shape, "items") else self.mesh.shape,
+               self._policy.fingerprint())
+        return self.compile_cache.get(key,
+                                      lambda: builder(self, spec,
+                                                      self._policy))
+
+    def _require_arch(self, what: str) -> ArchConfig:
+        if self.arch is None:
+            raise ValueError(f"{what} needs an architecture; this is a "
+                             f"kernel-only Cluster (arch=None)")
+        return self.arch
+
+
+class _PolicyScope:
+    def __init__(self, cluster: Cluster, pol: KernelPolicy):
+        self._cluster = cluster
+        self._pol = pol
+        self._prev: KernelPolicy | None = None
+        self._cm = None
+
+    def __enter__(self) -> KernelPolicy:
+        self._prev = self._cluster._policy
+        self._cluster._policy = self._pol
+        self._cm = use_policy(self._pol)
+        return self._cm.__enter__()
+
+    def __exit__(self, *exc):
+        try:
+            return self._cm.__exit__(*exc)
+        finally:
+            self._cluster._policy = self._prev
+
+
+# ----------------------------------------------------------------------------
+# Compiled programs
+# ----------------------------------------------------------------------------
+
+
+class Program:
+    """A compiled program bound to its cluster: `.run()`, `.plan()`,
+    `.report()`. Subclasses hold the actual compiled step functions."""
+
+    kind = "program"
+
+    def __init__(self, cluster: Cluster, spec, policy: KernelPolicy):
+        self.cluster = cluster
+        self.spec = spec
+        self.policy = policy
+        self._last_run: dict | None = None
+
+    def run(self, **kwargs) -> dict:
+        raise NotImplementedError
+
+    def plan(self) -> dict:
+        return self.cluster.plan()
+
+    def report(self) -> dict:
+        """Program metadata + (when run) a result summary."""
+        mesh = self.cluster.mesh
+        out = {
+            "kind": self.kind,
+            "arch": self.cluster.arch.name if self.cluster.arch else None,
+            "mesh": dict(mesh.shape.items())
+            if hasattr(mesh.shape, "items") else mesh.shape,
+            "spec": dataclasses.asdict(self.spec),
+            "policy": self.policy.describe(),
+            "compile_cache": {"hits": self.cluster.compile_cache.hits,
+                              "misses": self.cluster.compile_cache.misses},
+        }
+        if self._last_run is not None:
+            out["result"] = {k: v for k, v in self._last_run.items()
+                             if k != "params"}
+        return out
+
+
+class CompiledTrain(Program):
+    kind = "train"
+
+    def __init__(self, cluster, spec: TrainProgram, policy):
+        super().__init__(cluster, spec, policy)
+        cfg = cluster._require_arch("TrainProgram")
+        n = spec.num_steps
+        warmup = spec.warmup if spec.warmup is not None else max(n // 10, 1)
+        self.step: Callable = jax.jit(
+            steps.make_train_step(cfg,
+                                  schedule_kwargs={"warmup": warmup,
+                                                   "total": n},
+                                  policy=policy),
+            donate_argnums=0)
+
+    def init_state(self, seed: int | None = None):
+        cfg = self.cluster.arch
+        seed = self.spec.seed if seed is None else seed
+        state = steps.init_train_state(cfg, jax.random.PRNGKey(seed),
+                                       max_seq=self.spec.seq)
+        sh = self._state_shardings(state)
+        return jax.tree.map(jax.device_put, state, sh), sh
+
+    def _state_shardings(self, state):
+        state_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        _, state_log = steps.abstract_train_state(self.cluster.arch,
+                                                  self.spec.seq)
+        return self.cluster.state_shardings(state_sds, state_log)
+
+    def _feed(self, batch_sh):
+        from repro.data import (Distributor, DoubleBufferedFeed, Splitter,
+                                SyntheticLMStream)
+        from repro.data.pipeline import BatchSpec
+
+        cfg, spec = self.cluster.arch, self.spec
+        stream = SyntheticLMStream(BatchSpec(spec.batch, spec.seq, cfg.vocab),
+                                   seed=spec.seed)
+        dist = Distributor(self.cluster.mesh,
+                           Splitter(self.cluster.mesh, ("data",)))
+        if spec.double_buffer:
+            return DoubleBufferedFeed(
+                lambda s: dist.materialize(stream, s, batch_sh), depth=2)
+
+        def batches() -> Iterator[dict]:
+            step = 0
+            while True:
+                yield dist.materialize(stream, step, batch_sh)
+                step += 1
+
+        return batches()
+
+    def run(self) -> dict:
+        spec = self.spec
+        mesh, rules = self.cluster.mesh, self.cluster.rules
+        n = spec.num_steps
+        state, state_sh = self.init_state()
+        batch_sh = jax.sharding.NamedSharding(
+            mesh, rules.spec_for(("batch", "seq"), (spec.batch, spec.seq),
+                                 mesh))
+        feed = self._feed(batch_sh)
+        loop = TrainLoop(
+            TrainLoopConfig(
+                total_steps=n,
+                checkpoint_every=(spec.checkpoint_every
+                                  if spec.checkpoint_every is not None
+                                  else max(n // 2, 1)),
+                log_every=(spec.log_every if spec.log_every is not None
+                           else max(n // 10, 1)),
+                checkpoint_dir=spec.checkpoint_dir),
+            self.step, state, feed, state_shardings=state_sh)
+        try:
+            with compat.set_mesh(mesh):
+                report = loop.run(
+                    start_step=None if spec.resume else 0)
+        finally:
+            if hasattr(feed, "close"):
+                feed.close()
+        report["params"] = loop.state["params"]
+        self._last_run = report
+        return report
+
+
+class CompiledServe(Program):
+    kind = "serve"
+
+    def __init__(self, cluster, spec: ServeProgram, policy):
+        super().__init__(cluster, spec, policy)
+        cfg = cluster._require_arch("ServeProgram")
+        self.decode: Callable = jax.jit(
+            steps.make_decode_step(cfg, max_seq=spec.max_seq, policy=policy))
+
+    def init_params(self, seed: int | None = None):
+        cfg = self.cluster.arch
+        seed = self.spec.seed if seed is None else seed
+        return steps.init_params(cfg, jax.random.PRNGKey(seed),
+                                 max_seq=self.spec.max_seq)
+
+    def run(self, params=None, prompt=None) -> dict:
+        """Greedy decode `max_new` tokens per slot. `prompt` (B, P) is fed
+        token-by-token first (continuous-batching-style ingest); generation
+        then continues from the last sampled token."""
+        cfg, spec = self.cluster.arch, self.spec
+        if params is None:
+            params = self.init_params()
+        cache = steps.init_cache(cfg, spec.batch,
+                                 steps.decode_cache_len(cfg, spec.max_seq))
+        start = np.zeros((spec.batch, 1), np.int32)
+        pos0 = 0
+        if prompt is not None:
+            prompt = np.asarray(prompt)
+            tok = None
+            for t in range(prompt.shape[1]):
+                cache, tok = self.decode(
+                    params, cache,
+                    {"tokens": jnp.asarray(prompt[:, t:t + 1], jnp.int32),
+                     "pos": jnp.asarray(t, jnp.int32)})
+            start, pos0 = np.asarray(tok), prompt.shape[1]
+        loop = ServeLoop(self.decode, params, cache, batch_size=spec.batch,
+                         eos_id=spec.eos_id)
+        out = loop.generate(start, max_new=spec.max_new, start_pos=pos0)
+        result = {"tokens": out, "stats": loop.stats()}
+        self._last_run = {"stats": result["stats"],
+                          "tokens_shape": tuple(out.shape)}
+        return result
+
+
+class CompiledDryRun(Program):
+    kind = "dryrun"
+
+    def run(self) -> dict:
+        """Lower + compile the cell, extract memory/cost/collective analysis
+        (the body of the old launch/dryrun.run_cell)."""
+        from repro.core import hlo_cost, locality
+        from repro.core import mesh as hw
+
+        cluster, spec = self.cluster, self.spec
+        cfg = cluster._require_arch("DryRunProgram")
+        shape = SHAPES[spec.shape]
+        ok, reason = cell_supported(cfg, shape)
+        if not ok:
+            record = {"status": "skipped", "reason": reason}
+            self._last_run = record
+            return record
+
+        mesh, rules = cluster.mesh, cluster.rules
+        with use_policy(self.policy):
+            fn, args, in_sh, out_sh, donate = cells.build_cell(
+                cfg, shape, mesh, rules, fsdp_gather=spec.fsdp_gather,
+                policy=self.policy)
+            t0 = time.time()
+            with compat.set_mesh(mesh):
+                lowered = jax.jit(fn, in_shardings=in_sh,
+                                  out_shardings=out_sh,
+                                  donate_argnums=donate).lower(*args)
+                t_lower = time.time() - t0
+                t0 = time.time()
+                compiled = lowered.compile()
+                t_compile = time.time() - t0
+
+        mem = locality.extract_memory(compiled)
+        ca = locality.extract_costs(compiled)
+        print("memory_analysis:", compiled.memory_analysis())
+        print("cost_analysis (built-in, loop-unaware):", ca)
+
+        t0 = time.time()
+        hlo_text = compiled.as_text()
+        costs = hlo_cost.analyze(hlo_text)
+        t_analyze = time.time() - t0
+
+        n_chips = mesh.size
+        mf = cells.model_flops(cfg, shape)
+        flops_dev = costs["flops"]
+        bytes_dev = costs["bytes"]
+        coll_dev = costs["collective_operand_bytes"]
+        wire_dev = costs["collective_wire_bytes"]
+        record = {
+            "status": "ok",
+            "n_chips": n_chips,
+            "seconds": {"lower": t_lower, "compile": t_compile,
+                        "analyze": t_analyze},
+            "memory_analysis": mem,
+            "peak_device_bytes": locality.peak_device_bytes(mem),
+            "cost_analysis_builtin": ca,
+            "hlo": {
+                "flops_per_device": flops_dev,
+                "bytes_per_device": bytes_dev,
+                "transcendentals_per_device": costs["transcendentals"],
+                "collective_operand_bytes_per_device": coll_dev,
+                "collective_wire_bytes_per_device": wire_dev,
+                "collectives": costs["collectives"],
+            },
+            "model": mf,
+            "roofline": {
+                # terms in seconds, per the task's definitions
+                "compute_s": flops_dev * n_chips / (
+                    n_chips * hw.PEAK_FLOPS_BF16),
+                "memory_s": bytes_dev * n_chips / (n_chips * hw.HBM_BW),
+                "collective_s": coll_dev * n_chips / (
+                    n_chips * hw.ICI_BW_PER_LINK),
+                "collective_wire3_s": wire_dev / (3 * hw.ICI_BW_PER_LINK),
+                "useful_flops_ratio": mf["model_flops"] / max(
+                    flops_dev * n_chips, 1.0),
+            },
+        }
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: record["roofline"][k])
+        record["roofline"]["dominant"] = dom
+        self._last_run = record
+        return record
+
+
+class CompiledBench(Program):
+    kind = "bench"
+
+    def run(self, modules, echo=print) -> dict:
+        """Run the offered bench `modules` ([(name, module)]) under this
+        program's policy. Each section's CSV rows are echoed as they land
+        and collected (with per-row median over `repeat` runs); the active
+        policy — knobs plus tune-hit counters — rides in the result."""
+        import sys
+        import traceback
+
+        spec = self.spec
+        wanted = set(spec.sections) if spec.sections else None
+        results: dict = {"smoke": spec.smoke, "sections": {}}
+        failed = []
+        with use_policy(self.policy) as pol:
+            for name, mod in modules:
+                if wanted is not None and name not in wanted:
+                    continue
+                t0 = time.perf_counter()
+                try:
+                    lines = _median_lines(
+                        [_call_main(mod, spec.smoke)
+                         for _ in range(spec.repeat)])
+                    for line in lines:
+                        echo(line)
+                    results["sections"][name] = {
+                        "status": "ok",
+                        "seconds": time.perf_counter() - t0,
+                        "rows": [_parse_row(line) for line in lines],
+                    }
+                except Exception as e:
+                    failed.append(name)
+                    traceback.print_exc()
+                    results["sections"][name] = {
+                        "status": "error",
+                        "seconds": time.perf_counter() - t0,
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+                      file=sys.stderr)
+        results["policy"] = pol.describe()
+        results["failed"] = failed
+        self._last_run = {"failed": failed,
+                          "sections": sorted(results["sections"])}
+        return results
+
+
+def _call_main(mod, smoke: bool) -> list[str]:
+    import inspect
+    if "smoke" in inspect.signature(mod.main).parameters:
+        return mod.main(smoke=smoke)
+    return mod.main()
+
+
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"name": name, "us_per_call": us_val, "derived": derived}
+
+
+def _median_lines(runs: list[list[str]]) -> list[str]:
+    """Per-row median us_per_call across repeats (first run's derived)."""
+    import statistics
+    if len(runs) == 1:
+        return runs[0]
+    by_name: dict[str, list[float]] = {}
+    for run in runs:
+        for line in run:
+            r = _parse_row(line)
+            if r["us_per_call"] is not None:
+                by_name.setdefault(r["name"], []).append(r["us_per_call"])
+    out = []
+    for line in runs[0]:
+        r = _parse_row(line)
+        if r["us_per_call"] is None or r["name"] not in by_name:
+            out.append(line)
+            continue
+        med = statistics.median(by_name[r["name"]])
+        out.append(f"{r['name']},{med:.1f},{r['derived']}")
+    return out

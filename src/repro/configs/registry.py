@@ -63,11 +63,10 @@ class ArchConfig:
     # MoE dispatch locality (False = global/baseline, True = GShard groups;
     # see models/blocks.moe_apply and EXPERIMENTS.md §Perf H2/H3)
     moe_local_dispatch: bool = False
-    # fused producer–consumer kernel path (kernels/fused.py): norm folded
-    # into qkv/gate/up matmul prologues, bias+act / residual epilogues, and
-    # flash attention with the output projection fused. Applies wherever a
-    # block's norm kind is fusable; falls back per-site otherwise.
-    use_fused: bool = False
+    # NOTE: the fused producer–consumer kernel route (kernels/fused.py) is
+    # no longer a config bool — it is steered by repro.cluster.KernelPolicy
+    # (mode="fused"), scoped via `with cluster.policy(...)` or pinned with
+    # the step factories' `policy=` argument.
 
     @property
     def hd(self) -> int:

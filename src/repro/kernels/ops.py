@@ -1,14 +1,32 @@
-"""Public jit'd wrappers for the kernel suite.
+"""Public wrappers for the kernel suite, dispatched through the KernelPolicy.
 
-Dispatch: real `pl.pallas_call` lowering on TPU; `interpret=True` (kernel
-body executed op-by-op on CPU) everywhere else — numerics identical, which
-is what the allclose tests against ref.py verify.
+Every public wrapper consults the active `repro.cluster.KernelPolicy`
+(`current_policy()`) at call/trace time:
+
+  * mode "reference"  -> the pure-jnp oracle (kernels/ref.py composition);
+  * mode "interpret"  -> the Pallas body through the interpreter even on
+                         TPU (off-TPU backends always interpret — numerics
+                         identical, which is what the allclose tests
+                         against ref.py verify);
+  * otherwise         -> real `pl.pallas_call` lowering on TPU.
+
+Per-op overrides (`KernelPolicy.overrides`) re-route or re-block single
+ops; `tuned_call` delegates to `KernelPolicy.call`, where fused/tuned/
+reference selection and autotune-on-miss live in one place.
+
+Dispatch happens in Python, outside the inner jitted kernels (the resolved
+`interpret` flag is a static jit arg), so *direct* wrapper calls always see
+the policy active at that call. Inside a user-jitted function, however, the
+policy is read while tracing and baked into the trace — switching the
+ambient policy does NOT retrace an already-cached jit. Compiled Cluster
+programs pin their policy at compile time (and the compile cache keys on
+it), which is the supported way to compare policies on one model.
 
 Every kernel registers one `OpDescriptor` in `OPS` — the single table
-holding its public wrapper, its runtime-operand -> pipeline-shape-dict
-mapping, and which operand's dtype sets the VMEM tile footprint. The
-fused kernels (kernels/fused.py) register here too, so `tuned_call`
-serves fused and unfused names uniformly.
+holding its public wrapper, its reference composition, its runtime-operand
+-> pipeline-shape-dict mapping, and which operand's dtype sets the VMEM
+tile footprint. The fused kernels (kernels/fused.py) register here too, so
+`tuned_call` serves fused and unfused names uniformly.
 
 The fused wrappers carry a `custom_vjp`: the forward runs the fused Pallas
 kernel; the backward recomputes through the jnp reference composition
@@ -26,6 +44,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.cluster.policy import current_policy
+
 from . import axpy as _axpy
 from . import conv2d as _conv2d
 from . import dct8x8 as _dct8x8
@@ -33,13 +53,22 @@ from . import dotp as _dotp
 from . import flash_attention as _fa
 from . import fused as _fused
 from . import matmul as _matmul
-from . import pipeline as _pipeline
 from . import ref as _ref
 from . import rmsnorm as _rmsnorm
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _take_reference(name: str) -> bool:
+    """Reference-mode short-circuit for `name` under the active policy."""
+    pol = current_policy()
+    if pol.mode_for(name) == "reference":
+        pol.bump("ref_calls")
+        return True
+    pol.bump("pallas_calls")
+    return False
+
+
+def _interp(name: str) -> bool:
+    return current_policy().interpret_for(name)
 
 
 # ----------------------------------------------------------------------------
@@ -52,15 +81,19 @@ class OpDescriptor:
     """A kernel's public contract in one place.
 
     `shapes(*operands)` maps the wrapper's runtime operands to the
-    pipeline-layer shape dict (the autotuner key); `streamed_operand` is the
-    index of the main streamed operand — the one whose dtype sets the VMEM
-    tile footprint (weights/scales/alpha ride along). `fused` marks kernels
-    whose Traffic carries `saved_bytes` (an eliminated intermediate).
+    pipeline-layer shape dict (the autotuner key); `reference` is the
+    pure-jnp composition the "reference" policy mode routes to (and the
+    custom-VJP backward recomputes through, for fused kernels);
+    `streamed_operand` is the index of the main streamed operand — the one
+    whose dtype sets the VMEM tile footprint (weights/scales/alpha ride
+    along). `fused` marks kernels whose Traffic carries `saved_bytes` (an
+    eliminated intermediate).
     """
 
     name: str
     wrapper: Callable
     shapes: Callable[..., dict]
+    reference: Callable | None = None
     streamed_operand: int = 0
     fused: bool = False
 
@@ -74,7 +107,7 @@ def register_op(desc: OpDescriptor) -> OpDescriptor:
 
 
 def wrapper_for(name: str):
-    """Public name -> jit'd wrapper dispatch (same table tuned_call uses)."""
+    """Public name -> policy-dispatched wrapper (same table tuned_call uses)."""
     return OPS[name].wrapper
 
 
@@ -88,12 +121,10 @@ def kernel_shapes(name: str, *operands) -> dict:
 
 
 def tuned_call(name: str, *operands, **kwargs):
-    """Run a kernel with autotuned (registry-cached) block sizes."""
-    desc = OPS[name]
-    shapes = desc.shapes(*operands)
-    dtype_bytes = operands[desc.streamed_operand].dtype.itemsize
-    blocks = _pipeline.tuned_blocks(name, shapes, dtype_bytes=dtype_bytes)
-    return desc.wrapper(*operands, **blocks, **kwargs)
+    """Run a kernel under the active KernelPolicy: reference short-circuit,
+    per-op block override, or autotuned (registry-cached) block sizes with
+    autotune-on-miss — see `KernelPolicy.call`."""
+    return current_policy().call(name, *operands, **kwargs)
 
 
 # ----------------------------------------------------------------------------
@@ -101,45 +132,96 @@ def tuned_call(name: str, *operands, **kwargs):
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _matmul_c(a, b, *, bm, bn, bk, interpret):
+    return _matmul.matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
 def matmul(a, b, *, bm: int | None = None, bn: int | None = None,
            bk: int | None = None):
-    return _matmul.matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+    if _take_reference("matmul"):
+        return _ref.matmul(a, b)
+    return _matmul_c(a, b, bm=bm, bn=bn, bk=bk, interpret=_interp("matmul"))
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows",))
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _axpy_c(alpha, x, y, *, block_rows, interpret):
+    return _axpy.axpy(alpha, x, y, block_rows=block_rows, interpret=interpret)
+
+
 def axpy(alpha, x, y, *, block_rows: int | None = None):
-    return _axpy.axpy(alpha, x, y, block_rows=block_rows,
-                      interpret=_interpret())
+    if _take_reference("axpy"):
+        return _ref.axpy(alpha, x, y)
+    return _axpy_c(alpha, x, y, block_rows=block_rows,
+                   interpret=_interp("axpy"))
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows",))
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _dotp_c(x, y, *, block_rows, interpret):
+    return _dotp.dotp(x, y, block_rows=block_rows, interpret=interpret)
+
+
 def dotp(x, y, *, block_rows: int | None = None):
-    return _dotp.dotp(x, y, block_rows=block_rows, interpret=_interpret())
+    if _take_reference("dotp"):
+        return _ref.dotp(x, y)
+    return _dotp_c(x, y, block_rows=block_rows, interpret=_interp("dotp"))
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows",))
-def conv2d_3x3(x, w, *, block_rows: int | None = None):
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _conv2d_c(x, w, *, block_rows, interpret):
     return _conv2d.conv2d_3x3(x, w, block_rows=block_rows,
-                              interpret=_interpret())
+                              interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n",))
+def conv2d_3x3(x, w, *, block_rows: int | None = None):
+    if _take_reference("conv2d"):
+        return _ref.conv2d_3x3(x, w)
+    return _conv2d_c(x, w, block_rows=block_rows, interpret=_interp("conv2d"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _dct8x8_c(blocks, *, block_n, interpret):
+    return _dct8x8.dct8x8(blocks, block_n=block_n, interpret=interpret)
+
+
 def dct8x8(blocks, *, block_n: int | None = None):
-    return _dct8x8.dct8x8(blocks, block_n=block_n, interpret=_interpret())
+    if _take_reference("dct8x8"):
+        return _ref.dct8x8(blocks)
+    return _dct8x8_c(blocks, block_n=block_n, interpret=_interp("dct8x8"))
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows",))
-def rmsnorm(x, scale, *, block_rows: int | None = None):
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _rmsnorm_c(x, scale, *, block_rows, interpret):
     return _rmsnorm.rmsnorm(x, scale, block_rows=block_rows,
-                            interpret=_interpret())
+                            interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def rmsnorm(x, scale, *, block_rows: int | None = None):
+    if _take_reference("rmsnorm"):
+        return _ref.rmsnorm(x, scale)
+    return _rmsnorm_c(x, scale, block_rows=block_rows,
+                      interpret=_interp("rmsnorm"))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def _flash_attention_c(q, k, v, *, causal, bq, bk, interpret):
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=interpret)
+
+
+def _ref_flash_attention(q, k, v, *, causal: bool = True, **_):
+    g = q.shape[1] // k.shape[1]
+    return _ref.flash_attention(q, jnp.repeat(k, g, axis=1),
+                                jnp.repeat(v, g, axis=1), causal=causal)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, bq: int | None = None,
                     bk: int | None = None):
-    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
-                               interpret=_interpret())
+    if _take_reference("flash_attention"):
+        return _ref_flash_attention(q, k, v, causal=causal)
+    return _flash_attention_c(q, k, v, causal=causal, bq=bq, bk=bk,
+                              interpret=_interp("flash_attention"))
 
 
 # ----------------------------------------------------------------------------
@@ -147,22 +229,22 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int | None = None,
 # ----------------------------------------------------------------------------
 
 
-def _ref_rmsnorm_matmul(x, scale, w):
+def _ref_rmsnorm_matmul(x, scale, w, **_):
     return jnp.dot(_ref.rmsnorm(x, scale), w,
                    preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _rmsnorm_matmul_p(blocks: tuple, x, scale, w):
-    return _fused.rmsnorm_matmul(x, scale, w, interpret=_interpret(),
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _rmsnorm_matmul_p(blocks: tuple, interpret: bool, x, scale, w):
+    return _fused.rmsnorm_matmul(x, scale, w, interpret=interpret,
                                  **dict(blocks))
 
 
-def _rmsnorm_matmul_fwd(blocks, x, scale, w):
-    return _rmsnorm_matmul_p(blocks, x, scale, w), (x, scale, w)
+def _rmsnorm_matmul_fwd(blocks, interpret, x, scale, w):
+    return _rmsnorm_matmul_p(blocks, interpret, x, scale, w), (x, scale, w)
 
 
-def _rmsnorm_matmul_bwd(blocks, res, g):
+def _rmsnorm_matmul_bwd(blocks, interpret, res, g):
     _, vjp = jax.vjp(_ref_rmsnorm_matmul, *res)
     return vjp(g)
 
@@ -170,11 +252,18 @@ def _rmsnorm_matmul_bwd(blocks, res, g):
 _rmsnorm_matmul_p.defvjp(_rmsnorm_matmul_fwd, _rmsnorm_matmul_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def _rmsnorm_matmul_c(x, scale, w, *, bm, bn, interpret):
+    return _rmsnorm_matmul_p((("bm", bm), ("bn", bn)), interpret, x, scale, w)
+
+
 def rmsnorm_matmul(x, scale, w, *, bm: int | None = None,
                    bn: int | None = None):
     """matmul(rmsnorm(x, scale), w); the normed x never round-trips HBM."""
-    return _rmsnorm_matmul_p((("bm", bm), ("bn", bn)), x, scale, w)
+    if _take_reference("rmsnorm_matmul"):
+        return _ref_rmsnorm_matmul(x, scale, w)
+    return _rmsnorm_matmul_c(x, scale, w, bm=bm, bn=bn,
+                             interpret=_interp("rmsnorm_matmul"))
 
 
 def _ref_matmul_bias_act(act: str, a, b, bias):
@@ -183,17 +272,17 @@ def _ref_matmul_bias_act(act: str, a, b, bias):
     return _fused.ACTIVATIONS[act](h).astype(a.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _matmul_bias_act_p(act: str, blocks: tuple, a, b, bias):
-    return _fused.matmul_bias_act(a, b, bias, act=act,
-                                  interpret=_interpret(), **dict(blocks))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _matmul_bias_act_p(act: str, blocks: tuple, interpret: bool, a, b, bias):
+    return _fused.matmul_bias_act(a, b, bias, act=act, interpret=interpret,
+                                  **dict(blocks))
 
 
-def _matmul_bias_act_fwd(act, blocks, a, b, bias):
-    return _matmul_bias_act_p(act, blocks, a, b, bias), (a, b, bias)
+def _matmul_bias_act_fwd(act, blocks, interpret, a, b, bias):
+    return _matmul_bias_act_p(act, blocks, interpret, a, b, bias), (a, b, bias)
 
 
-def _matmul_bias_act_bwd(act, blocks, res, g):
+def _matmul_bias_act_bwd(act, blocks, interpret, res, g):
     _, vjp = jax.vjp(functools.partial(_ref_matmul_bias_act, act), *res)
     return vjp(g)
 
@@ -201,30 +290,38 @@ def _matmul_bias_act_bwd(act, blocks, res, g):
 _matmul_bias_act_p.defvjp(_matmul_bias_act_fwd, _matmul_bias_act_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+@functools.partial(jax.jit,
+                   static_argnames=("act", "bm", "bn", "bk", "interpret"))
+def _matmul_bias_act_c(a, b, bias, *, act, bm, bn, bk, interpret):
+    return _matmul_bias_act_p(act, (("bm", bm), ("bn", bn), ("bk", bk)),
+                              interpret, a, b, bias)
+
+
 def matmul_bias_act(a, b, bias, *, act: str = "gelu", bm: int | None = None,
                     bn: int | None = None, bk: int | None = None):
     """act(a @ b + bias) with the epilogue applied before writeback."""
-    return _matmul_bias_act_p(act, (("bm", bm), ("bn", bn), ("bk", bk)),
-                              a, b, bias)
+    if _take_reference("matmul_bias_act"):
+        return _ref_matmul_bias_act(act, a, b, bias)
+    return _matmul_bias_act_c(a, b, bias, act=act, bm=bm, bn=bn, bk=bk,
+                              interpret=_interp("matmul_bias_act"))
 
 
-def _ref_matmul_residual_add(a, b, res):
+def _ref_matmul_residual_add(a, b, res, **_):
     return (jnp.dot(a, b, preferred_element_type=jnp.float32)
             + res.astype(jnp.float32)).astype(a.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _matmul_residual_add_p(blocks: tuple, a, b, res):
-    return _fused.matmul_residual_add(a, b, res, interpret=_interpret(),
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _matmul_residual_add_p(blocks: tuple, interpret: bool, a, b, res):
+    return _fused.matmul_residual_add(a, b, res, interpret=interpret,
                                       **dict(blocks))
 
 
-def _matmul_residual_add_fwd(blocks, a, b, res):
-    return _matmul_residual_add_p(blocks, a, b, res), (a, b, res)
+def _matmul_residual_add_fwd(blocks, interpret, a, b, res):
+    return _matmul_residual_add_p(blocks, interpret, a, b, res), (a, b, res)
 
 
-def _matmul_residual_add_bwd(blocks, res_, g):
+def _matmul_residual_add_bwd(blocks, interpret, res_, g):
     _, vjp = jax.vjp(_ref_matmul_residual_add, *res_)
     return vjp(g)
 
@@ -233,12 +330,19 @@ _matmul_residual_add_p.defvjp(_matmul_residual_add_fwd,
                               _matmul_residual_add_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _matmul_residual_add_c(a, b, res, *, bm, bn, bk, interpret):
+    return _matmul_residual_add_p((("bm", bm), ("bn", bn), ("bk", bk)),
+                                  interpret, a, b, res)
+
+
 def matmul_residual_add(a, b, res, *, bm: int | None = None,
                         bn: int | None = None, bk: int | None = None):
     """a @ b + res; the matmul output never round-trips HBM."""
-    return _matmul_residual_add_p((("bm", bm), ("bn", bn), ("bk", bk)),
-                                  a, b, res)
+    if _take_reference("matmul_residual_add"):
+        return _ref_matmul_residual_add(a, b, res)
+    return _matmul_residual_add_c(a, b, res, bm=bm, bn=bn, bk=bk,
+                                  interpret=_interp("matmul_residual_add"))
 
 
 def _ref_flash_attention_proj(causal: bool, q, k, v, wo):
@@ -248,18 +352,19 @@ def _ref_flash_attention_proj(causal: bool, q, k, v, wo):
     return jnp.einsum("bhsk,hkd->bsd", o, wo).astype(q.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _flash_attention_proj_p(causal: bool, blocks: tuple, q, k, v, wo):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _flash_attention_proj_p(causal: bool, blocks: tuple, interpret: bool,
+                            q, k, v, wo):
     return _fused.flash_attention_proj(q, k, v, wo, causal=causal,
-                                       interpret=_interpret(),
-                                       **dict(blocks))
+                                       interpret=interpret, **dict(blocks))
 
 
-def _flash_attention_proj_fwd(causal, blocks, q, k, v, wo):
-    return _flash_attention_proj_p(causal, blocks, q, k, v, wo), (q, k, v, wo)
+def _flash_attention_proj_fwd(causal, blocks, interpret, q, k, v, wo):
+    return (_flash_attention_proj_p(causal, blocks, interpret, q, k, v, wo),
+            (q, k, v, wo))
 
 
-def _flash_attention_proj_bwd(causal, blocks, res, g):
+def _flash_attention_proj_bwd(causal, blocks, interpret, res, g):
     _, vjp = jax.vjp(functools.partial(_ref_flash_attention_proj, causal),
                      *res)
     return vjp(g)
@@ -269,12 +374,20 @@ _flash_attention_proj_p.defvjp(_flash_attention_proj_fwd,
                                _flash_attention_proj_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def _flash_attention_proj_c(q, k, v, wo, *, causal, bq, bk, interpret):
+    return _flash_attention_proj_p(causal, (("bq", bq), ("bk", bk)),
+                                   interpret, q, k, v, wo)
+
+
 def flash_attention_proj(q, k, v, wo, *, causal: bool = True,
                          bq: int | None = None, bk: int | None = None):
     """Flash attention with the output projection fused across heads."""
-    return _flash_attention_proj_p(causal, (("bq", bq), ("bk", bk)),
-                                   q, k, v, wo)
+    if _take_reference("flash_attention_proj"):
+        return _ref_flash_attention_proj(causal, q, k, v, wo)
+    return _flash_attention_proj_c(q, k, v, wo, causal=causal, bq=bq, bk=bk,
+                                   interpret=_interp("flash_attention_proj"))
 
 
 # ----------------------------------------------------------------------------
@@ -325,21 +438,56 @@ def _shapes_flash_attention_proj(q, k, v, wo):
             "dm": wo.shape[-1]}
 
 
+def _ref_axpy(alpha, x, y, **_):
+    return _ref.axpy(alpha, x, y)
+
+
+def _ref_dotp(x, y, **_):
+    return _ref.dotp(x, y)
+
+
+def _ref_matmul(a, b, **_):
+    return _ref.matmul(a, b)
+
+
+def _ref_conv2d(x, w, **_):
+    return _ref.conv2d_3x3(x, w)
+
+
+def _ref_dct8x8(blocks, **_):
+    return _ref.dct8x8(blocks)
+
+
+def _ref_rmsnorm(x, scale, **_):
+    return _ref.rmsnorm(x, scale)
+
+
+def _ref_matmul_bias_act_op(a, b, bias, *, act: str = "gelu", **_):
+    return _ref_matmul_bias_act(act, a, b, bias)
+
+
+def _ref_flash_attention_proj_op(q, k, v, wo, *, causal: bool = True, **_):
+    return _ref_flash_attention_proj(causal, q, k, v, wo)
+
+
 for _desc in (
-    OpDescriptor("axpy", axpy, _shapes_axpy, streamed_operand=1),
-    OpDescriptor("dotp", dotp, _shapes_dotp),
-    OpDescriptor("matmul", matmul, _shapes_matmul),
-    OpDescriptor("conv2d", conv2d_3x3, _shapes_conv2d),
-    OpDescriptor("dct8x8", dct8x8, _shapes_dct8x8),
-    OpDescriptor("rmsnorm", rmsnorm, _shapes_rmsnorm),
-    OpDescriptor("flash_attention", flash_attention, _shapes_flash_attention),
+    OpDescriptor("axpy", axpy, _shapes_axpy, _ref_axpy, streamed_operand=1),
+    OpDescriptor("dotp", dotp, _shapes_dotp, _ref_dotp),
+    OpDescriptor("matmul", matmul, _shapes_matmul, _ref_matmul),
+    OpDescriptor("conv2d", conv2d_3x3, _shapes_conv2d, _ref_conv2d),
+    OpDescriptor("dct8x8", dct8x8, _shapes_dct8x8, _ref_dct8x8),
+    OpDescriptor("rmsnorm", rmsnorm, _shapes_rmsnorm, _ref_rmsnorm),
+    OpDescriptor("flash_attention", flash_attention, _shapes_flash_attention,
+                 _ref_flash_attention),
     OpDescriptor("rmsnorm_matmul", rmsnorm_matmul, _shapes_rmsnorm_matmul,
-                 fused=True),
+                 _ref_rmsnorm_matmul, fused=True),
     OpDescriptor("matmul_bias_act", matmul_bias_act, _shapes_matmul_epilogue,
-                 fused=True),
+                 _ref_matmul_bias_act_op, fused=True),
     OpDescriptor("matmul_residual_add", matmul_residual_add,
-                 _shapes_matmul_epilogue, fused=True),
+                 _shapes_matmul_epilogue, _ref_matmul_residual_add,
+                 fused=True),
     OpDescriptor("flash_attention_proj", flash_attention_proj,
-                 _shapes_flash_attention_proj, fused=True),
+                 _shapes_flash_attention_proj, _ref_flash_attention_proj_op,
+                 fused=True),
 ):
     register_op(_desc)

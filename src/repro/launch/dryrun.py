@@ -10,6 +10,11 @@ if os.environ.get("REPRO_DRYRUN_DEVICES"):
 """Multi-pod dry-run: lower + compile every (arch x shape) on the production
 meshes, extract memory/cost/collective analysis, write one JSON per cell.
 
+A thin wrapper over the Cluster façade: each cell builds a
+`repro.cluster.Cluster` on the production mesh and compiles a
+`DryRunProgram` on it (the lower/compile/analyze body lives there); this
+module keeps the CLI, the variant table, and the JSON envelope.
+
 This is the proof that the distribution config is coherent: a sharding
 mismatch, OOM-at-compile, or unsupported collective fails the cell. The
 roofline tables in EXPERIMENTS.md are generated from these JSONs by
@@ -28,111 +33,14 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.configs import SHAPES, ARCHS, cell_supported, get, input_specs
-from repro.core import addressing, compat, hlo_cost, locality
-from repro.core import mesh as hw
+from repro.cluster import Cluster, DryRunProgram
+from repro.cluster.cells import (batch_logical, build_cell,  # noqa: F401
+                                 layer_gather_specs, model_flops,
+                                 shardings_for)
+from repro.configs import SHAPES, ARCHS, get
 from repro.launch.mesh import make_production_mesh
-from repro.models import steps
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
-
-
-def batch_logical(cfg, shape) -> dict:
-    log = {"tokens": ("batch", "seq")}
-    if shape.kind == "train":
-        log["labels"] = ("batch", "seq")
-    if shape.kind == "decode":
-        log["tokens"] = ("batch", None)
-        log["pos"] = ()
-    if cfg.family == "encdec":
-        log["enc_embeds"] = ("batch", None, None)
-    if cfg.family == "vlm":
-        log["img_embeds"] = ("batch", None, None)
-    return log
-
-
-def shardings_for(tree_sds, tree_logical, mesh, rules):
-    def one(sds, logical):
-        spec = rules.spec_for(logical, sds.shape, mesh)
-        return NamedSharding(mesh, spec)
-    return jax.tree.map(
-        one, tree_sds, tree_logical,
-        is_leaf=lambda x: isinstance(x, tuple) and all(
-            isinstance(e, (str, type(None))) for e in x))
-
-
-def layer_gather_specs(cfg, mesh, rules):
-    """PartitionSpecs for ONE super-block's weights with the `data` axis
-    removed — forcing FSDP all-gathers inside the scan (variant fsdpgather)."""
-    gather_rules = addressing.default_rules(mesh, fsdp=False,
-                                            overrides=cfg.rules_overrides)
-    p_sds, p_log = steps.abstract_params(cfg)
-
-    def one(sds, logical):
-        # strip the leading stacked "layers" dim
-        return gather_rules.spec_for(logical[1:], sds.shape[1:], mesh)
-
-    return jax.tree.map(
-        one, p_sds["blocks"], p_log["blocks"],
-        is_leaf=lambda x: isinstance(x, tuple) and all(
-            isinstance(e, (str, type(None))) for e in x))
-
-
-def build_cell(cfg, shape, mesh, rules, fsdp_gather: bool = False):
-    """Returns (fn, args_sds, in_shardings, out_shardings, donate)."""
-    batch_sds = input_specs(cfg, shape)
-    batch_log = batch_logical(cfg, shape)
-    batch_sh = shardings_for(batch_sds, batch_log, mesh, rules)
-
-    if shape.kind == "train":
-        wsc = layer_gather_specs(cfg, mesh, rules) if fsdp_gather else None
-        fn = steps.make_train_step(cfg, layer_wsc=wsc)
-        state_sds, state_log = steps.abstract_train_state(cfg, shape.seq_len)
-        state_sh = shardings_for(state_sds, state_log, mesh, rules)
-        scalar = NamedSharding(mesh, P())
-        out_sh = (state_sh, None)
-        return fn, (state_sds, batch_sds), (state_sh, batch_sh), out_sh, (0,)
-
-    params_sds, params_log = steps.abstract_params(cfg, shape.seq_len)
-    params_sh = shardings_for(params_sds, params_log, mesh, rules)
-
-    if shape.kind == "prefill":
-        fn = steps.make_prefill_step(cfg)
-        tok_sh = NamedSharding(
-            mesh, rules.spec_for(("batch",), (shape.global_batch,), mesh))
-        return (fn, (params_sds, batch_sds), (params_sh, batch_sh),
-                tok_sh, ())
-
-    # decode
-    cache_len = steps.decode_cache_len(cfg, shape.seq_len)
-    fn = steps.make_decode_step(cfg, max_seq=shape.seq_len)
-    cache_sds, cache_log = steps.abstract_cache(cfg, shape.global_batch,
-                                                cache_len)
-    cache_sh = shardings_for(cache_sds, cache_log, mesh, rules)
-    tok_sh = NamedSharding(
-        mesh, rules.spec_for(("batch", None), (shape.global_batch, 1), mesh))
-    return (fn, (params_sds, cache_sds, batch_sds),
-            (params_sh, cache_sh, batch_sh), (cache_sh, tok_sh), (1,))
-
-
-def model_flops(cfg, shape) -> dict:
-    n = cfg.n_params()
-    n_act = cfg.n_active_params()
-    if shape.kind == "train":
-        d = shape.global_batch * shape.seq_len
-        mf = 6.0 * n_act * d
-    elif shape.kind == "prefill":
-        d = shape.global_batch * shape.seq_len
-        mf = 2.0 * n_act * d
-    else:
-        d = shape.global_batch
-        mf = 2.0 * n_act * d
-    return {"n_params": n, "n_active_params": n_act, "tokens": d,
-            "model_flops": mf}
 
 
 # §Perf hillclimb variants: config deltas applied on top of the baseline.
@@ -166,76 +74,15 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         fsdp_gather = deltas.pop("_fsdp_gather", False)
         if deltas:
             cfg = dataclasses.replace(cfg, **deltas)
-    shape = SHAPES[shape_name]
     multi = mesh_kind == "multi"
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
               "variant": variant, "timestamp": time.time()}
-    ok, reason = cell_supported(cfg, shape)
-    if not ok:
-        record |= {"status": "skipped", "reason": reason}
-        _write(record, out_dir)
-        return record
 
     mesh = make_production_mesh(multi_pod=multi)
-    n_chips = mesh.size
-    rules = addressing.default_rules(mesh, overrides=cfg.rules_overrides)
-    fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh, rules,
-                                                 fsdp_gather=fsdp_gather)
-
-    t0 = time.time()
-    with compat.set_mesh(mesh):
-        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
-                          donate_argnums=donate).lower(*args)
-        t_lower = time.time() - t0
-        t0 = time.time()
-        compiled = lowered.compile()
-        t_compile = time.time() - t0
-
-    mem = locality.extract_memory(compiled)
-    ca = locality.extract_costs(compiled)
-    print("memory_analysis:", compiled.memory_analysis())
-    print("cost_analysis (built-in, loop-unaware):", ca)
-
-    t0 = time.time()
-    hlo_text = compiled.as_text()
-    costs = hlo_cost.analyze(hlo_text)
-    t_analyze = time.time() - t0
-
-    mf = model_flops(cfg, shape)
-    flops_dev = costs["flops"]
-    bytes_dev = costs["bytes"]
-    coll_dev = costs["collective_operand_bytes"]
-    wire_dev = costs["collective_wire_bytes"]
-    record |= {
-        "status": "ok",
-        "n_chips": n_chips,
-        "seconds": {"lower": t_lower, "compile": t_compile,
-                    "analyze": t_analyze},
-        "memory_analysis": mem,
-        "peak_device_bytes": locality.peak_device_bytes(mem),
-        "cost_analysis_builtin": ca,
-        "hlo": {
-            "flops_per_device": flops_dev,
-            "bytes_per_device": bytes_dev,
-            "transcendentals_per_device": costs["transcendentals"],
-            "collective_operand_bytes_per_device": coll_dev,
-            "collective_wire_bytes_per_device": wire_dev,
-            "collectives": costs["collectives"],
-        },
-        "model": mf,
-        "roofline": {
-            # terms in seconds, per the task's definitions
-            "compute_s": flops_dev * n_chips / (n_chips * hw.PEAK_FLOPS_BF16),
-            "memory_s": bytes_dev * n_chips / (n_chips * hw.HBM_BW),
-            "collective_s": coll_dev * n_chips / (n_chips * hw.ICI_BW_PER_LINK),
-            "collective_wire3_s": wire_dev / (3 * hw.ICI_BW_PER_LINK),
-            "useful_flops_ratio": mf["model_flops"] / max(
-                flops_dev * n_chips, 1.0),
-        },
-    }
-    dom = max(("compute_s", "memory_s", "collective_s"),
-              key=lambda k: record["roofline"][k])
-    record["roofline"]["dominant"] = dom
+    cluster = Cluster(cfg, mesh)
+    program = cluster.compile(DryRunProgram(shape=shape_name,
+                                            fsdp_gather=fsdp_gather))
+    record |= program.run()
     _write(record, out_dir)
     return record
 

@@ -3,9 +3,12 @@
     PYTHONPATH=src python -m repro.launch.train \
         --arch qwen3-14b --smoke --steps 50 --batch 4 --seq 128
 
-On CPU this runs reduced configs end-to-end (data pipeline -> region-planned
-shardings -> compiled train step -> checkpointing); on a TPU fleet the same
-invocation with the production mesh shape trains the full config.
+A thin wrapper over the Cluster façade: the CLI builds one
+`repro.cluster.Cluster` (mesh + addressing + kernel policy) and compiles a
+`TrainProgram` on it. On CPU this runs reduced configs end-to-end (data
+pipeline -> region-planned shardings -> compiled train step ->
+checkpointing); on a TPU fleet the same invocation with the production
+mesh shape trains the full config.
 """
 
 from __future__ import annotations
@@ -13,14 +16,11 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
+from repro.cluster import Cluster, TrainProgram
+from repro.cluster.policy import MODES
 from repro.configs import get
-from repro.core import addressing, compat
-from repro.data import Distributor, Splitter, SyntheticLMStream
-from repro.data.pipeline import BatchSpec
-from repro.models import steps
-from repro.runtime import TrainLoop, TrainLoopConfig
+from repro.core import compat
 
 
 def main():
@@ -35,45 +35,24 @@ def main():
     ap.add_argument("--checkpoint-every", type=int, default=25)
     ap.add_argument("--data-axis", type=int, default=0,
                     help="data axis size (0 = all devices)")
+    ap.add_argument("--policy", default=None, choices=MODES,
+                    help="kernel policy mode (default: env-derived)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore checkpoints in --checkpoint-dir")
     args = ap.parse_args()
 
     cfg = get(args.arch + ("-smoke" if args.smoke else ""))
     n_dev = jax.device_count()
     data = args.data_axis or n_dev
     mesh = compat.make_mesh((data, n_dev // data), ("data", "model"))
-    rules = addressing.default_rules(mesh, overrides=cfg.rules_overrides)
 
-    state = steps.init_train_state(cfg, jax.random.PRNGKey(0),
-                                   max_seq=args.seq)
-    state_sds = jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
-    _, state_log = steps.abstract_train_state(cfg, args.seq)
-    from repro.launch.dryrun import shardings_for
-    state_sh = shardings_for(state_sds, state_log, mesh, rules)
-    state = jax.tree.map(jax.device_put, state, state_sh)
-
-    spec = BatchSpec(global_batch=args.batch, seq_len=args.seq,
-                     vocab=cfg.vocab)
-    stream = SyntheticLMStream(spec, seed=0)
-    dist = Distributor(mesh, Splitter(mesh, ("data",)))
-    batch_sh = jax.sharding.NamedSharding(
-        mesh, rules.spec_for(("batch", "seq"), (args.batch, args.seq), mesh))
-
-    def batches():
-        step = 0
-        while True:
-            yield dist.materialize(stream, step, batch_sh)
-            step += 1
-
-    with compat.set_mesh(mesh):
-        train_step = jax.jit(steps.make_train_step(cfg), donate_argnums=0)
-        loop = TrainLoop(
-            TrainLoopConfig(total_steps=args.steps,
-                            checkpoint_every=args.checkpoint_every,
-                            checkpoint_dir=args.checkpoint_dir,
-                            log_every=max(args.steps // 10, 1)),
-            train_step, state, batches(), state_shardings=state_sh)
-        report = loop.run()
+    cluster = Cluster(cfg, mesh, policy=args.policy)
+    program = cluster.compile(TrainProgram(
+        num_steps=args.steps, batch=args.batch, seq=args.seq,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=not args.no_resume))
+    report = program.run()
 
     print(f"\nfinal step {report['final_step']} "
           f"in {report['wall_seconds']:.1f}s; "

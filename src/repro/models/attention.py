@@ -351,8 +351,8 @@ def pallas_flash_attention(q, k, v, *, causal: bool = True):
 
     q: (B, S, H, hd); k/v: (B, S, KV, hd) — transposed to the kernel's
     (B, H, S, hd) layout and back. Forward-only (no custom VJP): the serve
-    path's schedule; training uses the jnp flash VJP or, under
-    cfg.use_fused, the fused kernels' reference-composition backward.
+    path's schedule; training uses the jnp flash VJP or, under the "fused"
+    kernel policy, the fused kernels' reference-composition backward.
     """
     from repro.kernels import ops
     o = ops.flash_attention(jnp.transpose(q, (0, 2, 1, 3)),

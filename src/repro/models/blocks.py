@@ -17,6 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.cluster.policy import current_policy
 from repro.core.overlap import shard_batch
 
 from . import attention as attn_lib
@@ -57,8 +58,11 @@ def attn_block_specs(cfg) -> dict:
 
 
 def _fused_rms(cfg) -> bool:
-    """Is the fused producer–consumer path applicable to this block's norm?"""
-    return bool(getattr(cfg, "use_fused", False)) and cfg.norm == "rms"
+    """Is the fused producer–consumer path applicable to this block's norm?
+
+    The route is steered by the active KernelPolicy (mode "fused"), read at
+    trace time — model code asks the policy, not the config."""
+    return current_policy().fused and cfg.norm == "rms"
 
 
 def _fused_qkv(cfg, p, x, ctx):
@@ -115,7 +119,7 @@ def _ffn_residual(cfg, p, x):
     swiglu/geglu fold the norm into the gate/up prologues and the residual
     into the down-projection epilogue; gelu MLPs take the bias+activation
     epilogue. Falls back to the jnp composition per-site."""
-    if getattr(cfg, "use_fused", False):
+    if current_policy().fused:
         f = p["ffn"]
         if cfg.norm == "rms" and cfg.ffn_kind in ("swiglu", "geglu"):
             g = fused_norm_matmul(x, p["ln_ffn"], f["w_gate"])

@@ -210,7 +210,7 @@ def out_project(params: dict, attn_out):
 
 
 # ----------------------------------------------------------------------------
-# Fused kernel routing (cfg.use_fused): producer–consumer Pallas kernels
+# Fused kernel routing (KernelPolicy mode "fused"): producer–consumer kernels
 # ----------------------------------------------------------------------------
 #
 # These helpers flatten the leading dims and dispatch to the fused wrappers

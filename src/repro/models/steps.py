@@ -13,13 +13,13 @@ leading "layers" axis) followed by `n_layers % period` remainder layers
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.cluster import policy as kpolicy
 from repro.core import overlap
 from repro.models.blocks import BLOCKS
 from repro.models.layers import (ParamSpec, abstract_tree, init_tree,
@@ -228,23 +228,20 @@ def loss_fn(cfg, params, batch, layer_wsc=None):
 # Train step
 # ----------------------------------------------------------------------------
 
-def _resolve_fused(cfg, use_fused: bool | None):
-    """Step factories accept a `use_fused` override so benchmarks and tests
-    can compare the fused and unfused kernel routes on one config."""
-    if use_fused is None or use_fused == cfg.use_fused:
-        return cfg
-    return dataclasses.replace(cfg, use_fused=use_fused)
-
-
 def make_train_step(cfg, *, adam: AdamConfig | None = None,
                     schedule_kwargs: dict | None = None, layer_wsc=None,
-                    use_fused: bool | None = None):
-    cfg = _resolve_fused(cfg, use_fused)
+                    policy=None):
+    """`policy` (KernelPolicy | mode string | None) pins the kernel policy
+    the step traces under; None inherits the ambient scope *at trace time*
+    — the policy is baked into the jit trace, so re-scoping the ambient
+    policy around an already-jitted step does not re-route it. Build one
+    step per policy (as Cluster.compile does) to compare routes."""
+    pol = kpolicy.as_policy(policy) if policy is not None else None
     adam = adam or AdamConfig(moment_dtype=cfg.moment_dtype)
     sched = functools.partial(warmup_cosine, **(schedule_kwargs or {}))
     acc_dtype = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else F32
 
-    def train_step(state, batch):
+    def _body(state, batch):
         params = state["params"]
         k = cfg.grad_accum
         grad_fn = jax.value_and_grad(
@@ -280,6 +277,10 @@ def make_train_step(cfg, *, adam: AdamConfig | None = None,
             metrics |= parts
         return {"params": new_params, "opt": new_opt}, metrics
 
+    def train_step(state, batch):
+        with kpolicy.scoped(pol):
+            return _body(state, batch)
+
     return train_step
 
 
@@ -307,28 +308,30 @@ def init_train_state(cfg, key, max_seq: int = 4096,
 # Prefill / decode steps
 # ----------------------------------------------------------------------------
 
-def make_prefill_step(cfg, *, use_fused: bool | None = None):
-    cfg = _resolve_fused(cfg, use_fused)
+def make_prefill_step(cfg, *, policy=None):
+    pol = kpolicy.as_policy(policy) if policy is not None else None
 
     def prefill_step(params, batch):
-        cross = batch.get("enc_embeds", batch.get("img_embeds"))
-        hidden, _ = forward(cfg, params, batch["tokens"], cross_embeds=cross)
-        last = hidden[:, -1]
-        logits = jnp.einsum("bd,dv->bv", last, params["unembed"],
-                            preferred_element_type=F32)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        with kpolicy.scoped(pol):
+            cross = batch.get("enc_embeds", batch.get("img_embeds"))
+            hidden, _ = forward(cfg, params, batch["tokens"],
+                                cross_embeds=cross)
+            last = hidden[:, -1]
+            logits = jnp.einsum("bd,dv->bv", last, params["unembed"],
+                                preferred_element_type=F32)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     return prefill_step
 
 
-def make_decode_step(cfg, max_seq: int = 1 << 30, *,
-                     use_fused: bool | None = None):
+def make_decode_step(cfg, max_seq: int = 1 << 30, *, policy=None):
     """`max_seq` is the workload's logical context length; caches shorter
-    than it (windowed archs) operate as rolling buffers."""
-    cfg = _resolve_fused(cfg, use_fused)
+    than it (windowed archs) operate as rolling buffers. `policy` pins the
+    kernel policy the step traces under (None -> ambient)."""
+    pol = kpolicy.as_policy(policy) if policy is not None else None
     pattern, n_super, remainder = block_plan(cfg)
 
-    def decode_step(params, cache, batch):
+    def _body(params, cache, batch):
         tokens, pos = batch["tokens"], batch["pos"]
         B = tokens.shape[0]
         x = jnp.take(params["tok_embed"], tokens, axis=0)       # (B,1,d)
@@ -363,6 +366,10 @@ def make_decode_step(cfg, max_seq: int = 1 << 30, *,
                             preferred_element_type=F32)[:, 0]
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return new_cache, token
+
+    def decode_step(params, cache, batch):
+        with kpolicy.scoped(pol):
+            return _body(params, cache, batch)
 
     return decode_step
 

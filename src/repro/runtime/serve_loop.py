@@ -16,22 +16,31 @@ class ServeLoop:
     `decode_step(params, cache, batch) -> (cache, token)`; requests are
     slotted into the fixed batch (production continuous batching keeps a
     slot -> request map; completed slots are refilled each round).
+
+    `eos_id` (None disables): a slot that emits EOS is *finished* — its
+    subsequent tokens are masked to EOS, it stops counting toward emitted
+    lengths, and the loop stops early once every slot has finished.
     """
 
     def __init__(self, decode_step: Callable, params, cache, batch_size: int,
-                 eos_id: int = 0):
+                 eos_id: int | None = None):
         self.decode_step = decode_step
         self.params = params
         self.cache = cache
         self.batch_size = batch_size
         self.eos_id = eos_id
         self.latencies: list[float] = []
+        self.emitted_lengths: np.ndarray | None = None
+        self._finished: np.ndarray | None = None
 
     def generate(self, prompt_tokens: np.ndarray, max_new: int,
                  start_pos: int = 0) -> np.ndarray:
         """prompt_tokens: (B, 1) last prompt token per slot."""
         tok = jnp.asarray(prompt_tokens, jnp.int32)
         out = [np.asarray(tok)]
+        B = out[0].shape[0]
+        finished = np.zeros(B, bool)
+        emitted = np.zeros(B, np.int64)
         pos = start_pos
         for _ in range(max_new):
             t0 = time.perf_counter()
@@ -40,8 +49,19 @@ class ServeLoop:
                 {"tokens": tok, "pos": jnp.asarray(pos, jnp.int32)})
             jax.block_until_ready(tok)
             self.latencies.append(time.perf_counter() - t0)
-            out.append(np.asarray(tok))
+            step_tok = np.asarray(tok)
+            emitted += ~finished
+            if self.eos_id is not None:
+                # already-finished slots hold EOS regardless of the argmax
+                step_tok = np.where(finished[:, None], self.eos_id, step_tok)
+                finished |= step_tok[:, 0] == self.eos_id
+                tok = jnp.asarray(step_tok)
+            out.append(step_tok)
             pos += 1
+            if self.eos_id is not None and finished.all():
+                break
+        self.emitted_lengths = emitted
+        self._finished = finished
         return np.concatenate(out, axis=1)
 
     def stats(self) -> dict:
@@ -50,13 +70,21 @@ class ServeLoop:
         no measured samples, so throughput/percentiles report 0.0 rather
         than the fake `1/epsilon` numbers an empty array would produce;
         `decode_steps` counts the same warmup-dropped array the percentiles
-        are computed over.
+        are computed over. After a `generate`, `emitted_per_slot` reports
+        how many tokens each slot emitted before (and including) its EOS,
+        and `finished_slots` how many slots hit EOS.
         """
         lat = np.asarray(self.latencies[1:], np.float64)
         if lat.size == 0:
-            return {"decode_steps": 0, "p50_ms": 0.0, "p99_ms": 0.0,
-                    "tokens_per_s_per_slot": 0.0}
-        return {"decode_steps": int(lat.size),
-                "p50_ms": float(np.percentile(lat, 50) * 1e3),
-                "p99_ms": float(np.percentile(lat, 99) * 1e3),
-                "tokens_per_s_per_slot": float(1.0 / max(lat.mean(), 1e-9))}
+            st = {"decode_steps": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                  "tokens_per_s_per_slot": 0.0}
+        else:
+            st = {"decode_steps": int(lat.size),
+                  "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                  "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                  "tokens_per_s_per_slot": float(1.0 / max(lat.mean(), 1e-9))}
+        if self.emitted_lengths is not None:
+            st["emitted_per_slot"] = [int(n) for n in self.emitted_lengths]
+            if self.eos_id is not None:
+                st["finished_slots"] = int(self._finished.sum())
+        return st

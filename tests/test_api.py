@@ -1,4 +1,5 @@
-"""High-level API (the OpenMP layer): plan / train / serve one-calls."""
+"""High-level API (the OpenMP layer): plan / train / serve one-call shims
+over the Cluster façade."""
 
 import jax
 import numpy as np
@@ -20,7 +21,7 @@ def test_plan_regions():
 
 @pytest.mark.slow
 def test_train_and_serve_one_call(tmp_path):
-    report = api.train("xlstm-125m", steps_=4, batch=2, seq=16,
+    report = api.train("xlstm-125m", num_steps=4, batch=2, seq=16,
                        checkpoint_dir=str(tmp_path))
     assert report["final_step"] == 4
     out = api.serve("xlstm-125m", report["params"], batch=2, max_seq=16,
@@ -28,3 +29,12 @@ def test_train_and_serve_one_call(tmp_path):
     assert out["tokens"].shape == (2, 5)
     # 4 generated tokens -> 3 post-warmup latency samples
     assert out["stats"]["decode_steps"] == 3
+
+
+@pytest.mark.slow
+def test_train_steps_alias_deprecated(tmp_path):
+    """The old steps_ keyword still works (one release) but warns."""
+    with pytest.deprecated_call():
+        report = api.train("xlstm-125m", steps_=2, batch=2, seq=16,
+                           checkpoint_dir=str(tmp_path))
+    assert report["final_step"] == 2

@@ -4,7 +4,7 @@ Numerics: every fused kernel against its unfused jnp composition from
 kernels/ref.py, at fp32 (<= 1e-5) and bf16 (<= 2e-2), interpret mode.
 Mechanics: check_fusable compatibility, saved-bytes accounting, the
 autotune-on-miss path of tuned_call, the fused roofline, the model-stack
-routing behind cfg.use_fused, and the ServeLoop.stats guard.
+routing behind the "fused" KernelPolicy, and the ServeLoop.stats guard.
 """
 
 import dataclasses
@@ -249,7 +249,7 @@ def test_tuned_call_autotunes_on_registry_miss():
 
 
 # ----------------------------------------------------------------------------
-# model-stack routing behind cfg.use_fused
+# model-stack routing behind the "fused" KernelPolicy
 # ----------------------------------------------------------------------------
 
 
@@ -257,19 +257,19 @@ def test_tuned_call_autotunes_on_registry_miss():
 def test_model_fused_route_matches_unfused():
     """Forward loss and greedy decode agree between the fused and unfused
     routes on a smoke config (rms norm + swiglu + GQA)."""
+    from repro.cluster import use_policy
     from repro.models import steps
     cfg = dataclasses.replace(registry.get("yi-34b-smoke"), n_layers=2)
-    cfg_f = dataclasses.replace(cfg, use_fused=True)
-    assert not cfg.use_fused
     params = steps.init_params(cfg, jax.random.PRNGKey(0), max_seq=32)
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
     batch = {"tokens": tokens, "labels": tokens}
     l0, _ = steps.loss_fn(cfg, params, batch)
-    l1, _ = steps.loss_fn(cfg_f, params, batch)
+    with use_policy("fused"):
+        l1, _ = steps.loss_fn(cfg, params, batch)
     assert abs(float(l0) - float(l1)) < 2e-2
 
     dec_u = steps.make_decode_step(cfg, max_seq=16)
-    dec_f = steps.make_decode_step(cfg, max_seq=16, use_fused=True)
+    dec_f = steps.make_decode_step(cfg, max_seq=16, policy="fused")
     cache = steps.init_cache(cfg, 2, 16)
     b1 = {"tokens": jnp.zeros((2, 1), jnp.int32),
           "pos": jnp.asarray(0, jnp.int32)}
