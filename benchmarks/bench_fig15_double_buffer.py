@@ -25,12 +25,14 @@ def run(produce_s: float, compute_s: float, steps: int = 12) -> dict:
         next(feed)
         time.sleep(compute_s)
     wall = time.perf_counter() - t0
+    ledger = feed.stall_report()          # producer busy vs consumer blocked
     feed.close()
     serial = steps * (produce_s + compute_s)
     ideal = steps * max(produce_s, compute_s)
     return {"wall": wall, "serial": serial, "ideal": ideal,
             "overlap_efficiency": (serial - wall) / (serial - ideal + 1e-9),
-            "compute_util": steps * compute_s / wall}
+            "compute_util": steps * compute_s / wall,
+            "dma_overlap_pct": ledger["overlap_pct"]}
 
 
 def main(smoke: bool = False) -> list[str]:
@@ -46,7 +48,8 @@ def main(smoke: bool = False) -> list[str]:
         lines.append(
             f"fig15/{name},{r['wall'] * 1e6 / steps:.0f},"
             f"compute_util={r['compute_util']:.2f};"
-            f"overlap_eff={max(min(r['overlap_efficiency'], 1.5), 0):.2f}")
+            f"overlap_eff={max(min(r['overlap_efficiency'], 1.5), 0):.2f};"
+            f"dma_overlap={r['dma_overlap_pct']:.0f}")
     return lines
 
 

@@ -40,13 +40,15 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from repro.cluster import BenchProgram, Cluster  # noqa: E402
 from repro.cluster.policy import MODES  # noqa: E402
 
-from benchmarks import (bench_fig4_interconnect, bench_fig5_hybrid,  # noqa: E402
+from benchmarks import (bench_decode_throughput,  # noqa: E402
+                        bench_fig4_interconnect, bench_fig5_hybrid,
                         bench_fig13_scaling, bench_fig14_breakdown,
                         bench_fig15_double_buffer, bench_fig16_energy,
                         bench_table1_kernels)
 
 MODULES = [
     ("table1", bench_table1_kernels),
+    ("decode", bench_decode_throughput),
     ("fig4", bench_fig4_interconnect),
     ("fig5", bench_fig5_hybrid),
     ("fig13", bench_fig13_scaling),
@@ -72,15 +74,49 @@ def _fused_comparison_line(rows: list[dict]) -> str | None:
     return "# fused-vs-unfused: " + " | ".join(parts)
 
 
+def _decode_rows(results: dict) -> list[dict]:
+    section = results["sections"].get("decode")
+    if not section or section["status"] != "ok":
+        return []
+    return section["rows"]
+
+
+def _decode_comparison_line(rows: list[dict]) -> str | None:
+    """K=1 (per-token loop) vs K=16 (scan-compiled engine) summary."""
+    by_k = {}
+    for r in rows:
+        kv = dict(p.split("=", 1) for p in r["derived"].split(";"))
+        by_k[r["name"].removeprefix("decode/")] = (r["us_per_call"], kv)
+    if "K1" not in by_k or "K16" not in by_k:
+        return None
+    (us1, kv1), (us16, kv16) = by_k["K1"], by_k["K16"]
+    return (f"# decode-throughput: K16 {float(kv16['tokens_per_s']):.1f} tok/s"
+            f" (stall {float(kv16['stall_pct']):.1f}%,"
+            f" {kv16['host_syncs']} syncs) vs"
+            f" K1 {float(kv1['tokens_per_s']):.1f} tok/s"
+            f" (stall {float(kv1['stall_pct']):.1f}%,"
+            f" {kv1['host_syncs']} syncs) —"
+            f" {us1 / max(us16, 1e-9):.2f}x per-token speedup")
+
+
 def _persist_table1(results: dict, repeat: int) -> Path | None:
     section = results["sections"].get("table1")
     if not section or section["status"] != "ok":
         return None
     path = Path(__file__).resolve().parents[1] / "BENCH_table1.json"
-    path.write_text(json.dumps(
-        {"smoke": results["smoke"], "timestamp": results["timestamp"],
-         "repeat": repeat, "policy": results["policy"],
-         "rows": section["rows"]}, indent=2))
+    record = {"smoke": results["smoke"], "timestamp": results["timestamp"],
+              "repeat": repeat, "policy": results["policy"],
+              "rows": section["rows"]}
+    decode = _decode_rows(results)
+    if decode:
+        # the K=1 vs K=16 engine trajectory rides with the kernel table
+        record["decode"] = [r for r in decode
+                            if r["name"] in ("decode/K1", "decode/K16")]
+        line = _decode_comparison_line(decode)
+        if line:
+            record["decode_summary"] = line.removeprefix(
+                "# decode-throughput: ")
+    path.write_text(json.dumps(record, indent=2))
     return path
 
 
@@ -114,6 +150,11 @@ def main(argv: list[str] | None = None) -> None:
     results = program.run(MODULES)
     results["timestamp"] = time.time()
     failed = results.pop("failed")
+    decode_rows = _decode_rows(results)
+    if decode_rows:
+        dec_line = _decode_comparison_line(decode_rows)
+        if dec_line:
+            print(dec_line)
     table1 = results["sections"].get("table1")
     if table1 and table1["status"] == "ok":
         cmp_line = _fused_comparison_line(table1["rows"])

@@ -59,12 +59,18 @@ def train(arch: str, *, num_steps: int | None = None, steps_=_UNSET,
 
 
 def serve(arch: str, params=None, *, batch: int = 4, max_seq: int = 64,
-          max_new: int = 16, smoke: bool = True, seed: int = 0) -> dict:
+          max_new: int = 16, smoke: bool = True, seed: int = 0,
+          chunk: int = 1) -> dict:
     """One-call batched greedy decoding. Returns tokens + latency stats.
 
     Shim over `Cluster(...).compile(ServeProgram(...)).run(params)`.
+    `chunk` defaults to 1 — the legacy per-token loop with per-token
+    latency samples — unlike `ServeProgram`, whose default (16) runs the
+    scan-compiled engine; pass chunk=K here to opt the shim into it (the
+    decoded tokens are bit-identical either way).
     """
     cluster = Cluster(arch + ("-smoke" if smoke else ""))
     program = cluster.compile(ServeProgram(
-        batch=batch, max_seq=max_seq, max_new=max_new, seed=seed))
+        batch=batch, max_seq=max_seq, max_new=max_new, seed=seed,
+        chunk=chunk))
     return program.run(params=params)

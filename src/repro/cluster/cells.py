@@ -58,8 +58,14 @@ def layer_gather_specs(cfg, mesh, rules):
 
 
 def build_cell(cfg, shape, mesh, rules, fsdp_gather: bool = False,
-               policy=None):
-    """Returns (fn, args_sds, in_shardings, out_shardings, donate)."""
+               policy=None, decode_chunk: int = 1):
+    """Returns (fn, args_sds, in_shardings, out_shardings, donate).
+
+    `decode_chunk > 1` (decode shapes only) builds the execution-engine
+    cell instead of the single-step one: K decode steps rolled into one
+    `lax.scan` with donated cache/token/flag buffers — the program the
+    dry-run lowers then mirrors what `ServeProgram(chunk=K)` runs.
+    """
     batch_sds = input_specs(cfg, shape)
     batch_log = batch_logical(cfg, shape)
     batch_sh = shardings_for(batch_sds, batch_log, mesh, rules)
@@ -84,12 +90,33 @@ def build_cell(cfg, shape, mesh, rules, fsdp_gather: bool = False,
 
     # decode
     cache_len = steps.decode_cache_len(cfg, shape.seq_len)
-    fn = steps.make_decode_step(cfg, max_seq=shape.seq_len, policy=policy)
     cache_sds, cache_log = steps.abstract_cache(cfg, shape.global_batch,
                                                 cache_len)
     cache_sh = shardings_for(cache_sds, cache_log, mesh, rules)
     tok_sh = NamedSharding(
         mesh, rules.spec_for(("batch", None), (shape.global_batch, 1), mesh))
+    if decode_chunk > 1:
+        from repro.runtime import engine
+        step = steps.make_decode_step(cfg, max_seq=shape.seq_len,
+                                      policy=policy)
+        fn = engine.decode_chunk_fn(step, decode_chunk)
+        B = shape.global_batch
+        i32 = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        slot_sds = lambda dt: jax.ShapeDtypeStruct((B,), dt)
+        slot_sh = NamedSharding(
+            mesh, rules.spec_for(("batch",), (B,), mesh))
+        args = (params_sds, cache_sds, batch_sds["tokens"],
+                slot_sds(jax.numpy.bool_), slot_sds(jax.numpy.int32),
+                i32, i32)
+        scalar_sh = NamedSharding(mesh, jax.sharding.PartitionSpec())
+        in_sh = (params_sh, cache_sh, batch_sh["tokens"], slot_sh, slot_sh,
+                 scalar_sh, scalar_sh)
+        toks_sh = NamedSharding(
+            mesh, rules.spec_for(("batch", None), (B, decode_chunk), mesh))
+        out_sh = (cache_sh, batch_sh["tokens"], slot_sh, slot_sh, scalar_sh,
+                  scalar_sh, scalar_sh, toks_sh)
+        return fn, args, in_sh, out_sh, (1, 2, 3, 4)
+    fn = steps.make_decode_step(cfg, max_seq=shape.seq_len, policy=policy)
     return (fn, (params_sds, cache_sds, batch_sds),
             (params_sh, cache_sh, batch_sh), (cache_sh, tok_sh), (1,))
 

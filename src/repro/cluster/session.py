@@ -38,7 +38,8 @@ from repro.configs.registry import (ArchConfig, SHAPES, cell_supported,
                                     kernel_tunes)
 from repro.core import addressing, compat
 from repro.models import steps
-from repro.runtime import CompileCache, ServeLoop, TrainLoop, TrainLoopConfig
+from repro.runtime import (CompileCache, ServeLoop, TrainLoop,
+                           TrainLoopConfig, engine)
 
 
 # ----------------------------------------------------------------------------
@@ -60,6 +61,9 @@ class TrainProgram:
     warmup: int | None = None              # None -> max(num_steps // 10, 1)
     resume: bool = False                   # restore latest checkpoint first
     double_buffer: bool = False            # prefetch feed (DMA analogue)
+    steps_per_sync: int = 1                # steps per scan-compiled chunk
+    #   (> 1: host syncs once per chunk; straggler/logging sample at chunk
+    #   granularity; state donated through the chunk — engine.py)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +75,9 @@ class ServeProgram:
     max_new: int = 16
     seed: int = 0
     eos_id: int | None = None
+    chunk: int = 16                        # decode steps per host sync:
+    #   1 = per-token host loop; K > 1 = scan-compiled K-step engine with
+    #   donated cache/token buffers (runtime/engine.py)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +87,8 @@ class DryRunProgram:
 
     shape: str = "train_4k"
     fsdp_gather: bool = False
+    decode_chunk: int = 1                  # decode shapes: lower the K-step
+    #   scan-compiled engine cell instead of the single-step one
 
 
 @dataclasses.dataclass(frozen=True)
@@ -272,12 +281,15 @@ class CompiledTrain(Program):
         cfg = cluster._require_arch("TrainProgram")
         n = spec.num_steps
         warmup = spec.warmup if spec.warmup is not None else max(n // 10, 1)
-        self.step: Callable = jax.jit(
-            steps.make_train_step(cfg,
-                                  schedule_kwargs={"warmup": warmup,
-                                                   "total": n},
-                                  policy=policy),
-            donate_argnums=0)
+        raw_step = steps.make_train_step(cfg,
+                                         schedule_kwargs={"warmup": warmup,
+                                                          "total": n},
+                                         policy=policy)
+        self.step: Callable = jax.jit(raw_step, donate_argnums=0)
+        # scan-of-steps engine program (state donated through the chunk)
+        self.chunk: Callable | None = (
+            engine.make_train_chunk(raw_step)
+            if spec.steps_per_sync > 1 else None)
 
     def init_state(self, seed: int | None = None):
         cfg = self.cluster.arch
@@ -305,8 +317,12 @@ class CompiledTrain(Program):
         dist = Distributor(self.cluster.mesh,
                            Splitter(self.cluster.mesh, ("data",)))
         if spec.double_buffer:
+            # chunked stepping drains steps_per_sync batches per dispatch;
+            # the ring must hold a full chunk or the drain blocks on the
+            # producer and un-hides the transfers it exists to hide
             return DoubleBufferedFeed(
-                lambda s: dist.materialize(stream, s, batch_sh), depth=2)
+                lambda s: dist.materialize(stream, s, batch_sh),
+                depth=max(2, spec.steps_per_sync))
 
         def batches() -> Iterator[dict]:
             step = 0
@@ -333,8 +349,10 @@ class CompiledTrain(Program):
                                   else max(n // 2, 1)),
                 log_every=(spec.log_every if spec.log_every is not None
                            else max(n // 10, 1)),
-                checkpoint_dir=spec.checkpoint_dir),
-            self.step, state, feed, state_shardings=state_sh)
+                checkpoint_dir=spec.checkpoint_dir,
+                steps_per_sync=spec.steps_per_sync),
+            self.step, state, feed, state_shardings=state_sh,
+            train_chunk=self.chunk)
         try:
             with compat.set_mesh(mesh):
                 report = loop.run(
@@ -342,6 +360,8 @@ class CompiledTrain(Program):
         finally:
             if hasattr(feed, "close"):
                 feed.close()
+        if hasattr(feed, "stall_report"):
+            report["feed"] = feed.stall_report()
         report["params"] = loop.state["params"]
         self._last_run = report
         return report
@@ -355,6 +375,11 @@ class CompiledServe(Program):
         cfg = cluster._require_arch("ServeProgram")
         self.decode: Callable = jax.jit(
             steps.make_decode_step(cfg, max_seq=spec.max_seq, policy=policy))
+        # the K-step scan program is built once here so repeated .run()s
+        # hit the jit cache instead of re-tracing the whole chunk
+        self.engine = (engine.DecodeEngine(self.decode, spec.chunk,
+                                           eos_id=spec.eos_id)
+                       if spec.chunk > 1 else None)
 
     def init_params(self, seed: int | None = None):
         cfg = self.cluster.arch
@@ -383,7 +408,8 @@ class CompiledServe(Program):
                      "pos": jnp.asarray(t, jnp.int32)})
             start, pos0 = np.asarray(tok), prompt.shape[1]
         loop = ServeLoop(self.decode, params, cache, batch_size=spec.batch,
-                         eos_id=spec.eos_id)
+                         eos_id=spec.eos_id, chunk=spec.chunk,
+                         engine=self.engine)
         out = loop.generate(start, max_new=spec.max_new, start_pos=pos0)
         result = {"tokens": out, "stats": loop.stats()}
         self._last_run = {"stats": result["stats"],
@@ -413,7 +439,7 @@ class CompiledDryRun(Program):
         with use_policy(self.policy):
             fn, args, in_sh, out_sh, donate = cells.build_cell(
                 cfg, shape, mesh, rules, fsdp_gather=spec.fsdp_gather,
-                policy=self.policy)
+                policy=self.policy, decode_chunk=spec.decode_chunk)
             t0 = time.time()
             with compat.set_mesh(mesh):
                 lowered = jax.jit(fn, in_shardings=in_sh,

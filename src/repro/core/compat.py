@@ -16,7 +16,8 @@ from typing import Any, Sequence
 
 import jax
 
-__all__ = ["make_mesh", "abstract_mesh", "shard_map", "set_mesh"]
+__all__ = ["make_mesh", "abstract_mesh", "shard_map", "set_mesh",
+           "pallas_hints", "pallas_compiler_params"]
 
 
 def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
@@ -80,3 +81,64 @@ def set_mesh(mesh):
             yield
     else:                                   # AbstractMesh on a legacy install
         yield
+
+
+# ----------------------------------------------------------------------------
+# Pallas pipelining hints
+# ----------------------------------------------------------------------------
+#
+# The hint surface of pallas_call drifts across releases: `cost_estimate`
+# moved from absent to a first-class kwarg, the TPU compiler-params class was
+# renamed (TPUCompilerParams -> CompilerParams), and explicit multiple-
+# buffering knobs (`num_stages` / `pipeline_depth`) exist only on some
+# versions. `pallas_hints` keeps only what the installed version accepts, so
+# kernel code states its full intent and older installs silently drop the
+# parts they cannot express (they are scheduling hints, never semantics).
+
+
+def _pallas_tpu_params_cls():
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    return cls if cls is not None else getattr(pltpu, "TPUCompilerParams")
+
+
+def _pallas_tpu_fields() -> frozenset:
+    return frozenset(
+        getattr(_pallas_tpu_params_cls(), "__dataclass_fields__", ()))
+
+
+def _pallas_call_params() -> frozenset:
+    from jax.experimental import pallas as pl
+    return frozenset(inspect.signature(pl.pallas_call).parameters)
+
+
+def pallas_hints(*, cost: dict | None = None, num_stages: int | None = None,
+                 dimension_semantics: Sequence[str] | None = None,
+                 ) -> tuple[dict, dict]:
+    """Split pipelining hints into what this install can express.
+
+    Returns ``(pallas_call kwargs, compiler-params kwargs)``. `cost` is a
+    dict of `pl.CostEstimate` fields (flops/bytes_accessed/transcendentals);
+    `num_stages` the desired multiple-buffering depth (2 = classic double
+    buffering). Unsupported hints are dropped — they only steer scheduling.
+    """
+    from jax.experimental import pallas as pl
+    call_kw: dict[str, Any] = {}
+    cp_kw: dict[str, Any] = {}
+    fields = _pallas_tpu_fields()
+    if dimension_semantics is not None and "dimension_semantics" in fields:
+        cp_kw["dimension_semantics"] = tuple(dimension_semantics)
+    if (cost is not None and hasattr(pl, "CostEstimate")
+            and "cost_estimate" in _pallas_call_params()):
+        call_kw["cost_estimate"] = pl.CostEstimate(**cost)
+    if num_stages is not None:
+        for field in ("num_stages", "pipeline_depth", "num_pipeline_stages"):
+            if field in fields:
+                cp_kw[field] = int(num_stages)
+                break
+    return call_kw, cp_kw
+
+
+def pallas_compiler_params(cp_kwargs: dict):
+    """TPU compiler-params object across both class generations."""
+    return _pallas_tpu_params_cls()(**cp_kwargs)

@@ -19,6 +19,23 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def overlap_report(produce_s: float, consumer_wait_s: float) -> dict:
+    """Transfer-vs-compute overlap ledger (paper Fig. 15 steady state).
+
+    `produce_s`: total producer/DMA busy seconds; `consumer_wait_s`: total
+    seconds the consumer blocked waiting on the feed. The difference is the
+    transfer time that rode under compute; `overlap_pct` is the fraction of
+    transfer hidden (100% = fully double-buffered, 0% = serial).
+    """
+    hidden = max(produce_s - consumer_wait_s, 0.0)
+    return {
+        "produce_s": produce_s,
+        "consumer_wait_s": consumer_wait_s,
+        "hidden_s": hidden,
+        "overlap_pct": 100.0 * hidden / produce_s if produce_s > 0 else 0.0,
+    }
+
+
 def with_sharding(x, spec: P):
     """Annotate intermediate sharding (no-op under a trivial mesh)."""
     try:

@@ -6,6 +6,17 @@ Here: while the device computes step k, a background thread materializes and
 device_put()s batch k+1 (JAX transfers are async), so the H2D transfer rides
 under the step. The ring-buffer depth is configurable (depth=2 = classic
 double buffering).
+
+Failure mode: an exception in `make_batch` is captured on the producer
+thread and re-raised on the consumer side (after any batches queued before
+the failure are drained) — a dead producer never leaves the consumer
+blocked forever. `close()` is idempotent.
+
+Timings: `transfer_seconds` is producer ("DMA") time per batch;
+`consumer_wait_seconds` is how long each `next()` blocked on the queue —
+in steady state the transfer hides under compute and the waits collapse to
+~0. `stall_report()` folds both into the transfer-vs-compute overlap
+ledger (core/overlap.overlap_report).
 """
 
 from __future__ import annotations
@@ -14,6 +25,8 @@ import queue
 import threading
 import time
 from typing import Callable, Iterator
+
+_ERR = object()          # producer-failure sentinel (queued after good batches)
 
 
 class DoubleBufferedFeed:
@@ -25,6 +38,9 @@ class DoubleBufferedFeed:
         self._stop = threading.Event()
         self._step = start_step
         self._timings: list[float] = []
+        self._waits: list[float] = []
+        self._error: BaseException | None = None
+        self._closed = False
         self._thread = threading.Thread(target=self._producer, daemon=True)
         self._thread.start()
 
@@ -32,31 +48,66 @@ class DoubleBufferedFeed:
         step = self._step
         while not self._stop.is_set():
             t0 = time.perf_counter()
-            batch = self.make_batch(step)
-            self._timings.append(time.perf_counter() - t0)
+            try:
+                batch = self.make_batch(step)
+            except BaseException as e:          # noqa: BLE001 — relayed
+                self._error = e
+                item: tuple = (_ERR, e)
+            else:
+                self._timings.append(time.perf_counter() - t0)
+                item = (step, batch)
             while not self._stop.is_set():
                 try:
-                    self._q.put((step, batch), timeout=0.1)
+                    self._q.put(item, timeout=0.1)
                     break
                 except queue.Full:
                     continue
+            if item[0] is _ERR:
+                return
             step += 1
 
     def __iter__(self) -> Iterator[tuple[int, dict]]:
         return self
 
     def __next__(self) -> tuple[int, dict]:
-        return self._q.get()
+        if self._error is not None and self._q.empty():
+            self._raise()                       # sentinel already consumed
+        t0 = time.perf_counter()
+        item = self._q.get()
+        self._waits.append(time.perf_counter() - t0)
+        if item[0] is _ERR:
+            self._raise()
+        return item
+
+    def _raise(self):
+        raise RuntimeError(
+            "DoubleBufferedFeed producer failed in make_batch"
+        ) from self._error
 
     @property
     def transfer_seconds(self) -> list[float]:
         return list(self._timings)
 
+    @property
+    def consumer_wait_seconds(self) -> list[float]:
+        return list(self._waits)
+
+    def stall_report(self) -> dict:
+        """Transfer-vs-compute overlap: producer busy time vs consumer
+        blocked time (see core/overlap.overlap_report). The first wait is
+        dropped — it is the pipeline fill, not a steady-state stall."""
+        from repro.core.overlap import overlap_report
+        return overlap_report(sum(self._timings), sum(self._waits[1:]))
+
     def close(self):
+        if self._closed:
+            return
+        self._closed = True
         self._stop.set()
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
-        self._thread.join(timeout=2.0)
+        if self._thread.is_alive():
+            self._thread.join(timeout=2.0)

@@ -36,8 +36,8 @@ from typing import Any, Callable, Iterator, Sequence
 
 import jax
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import compat
 from repro.core import mesh as hw
 from repro.core.interconnect import TOP_H, TopologyModel
 from repro.launch.roofline import kernel_roofline
@@ -46,11 +46,9 @@ from repro.launch.roofline import kernel_roofline
 # Tile / grid description
 # ----------------------------------------------------------------------------
 
-_MEMORY_SPACES = {"smem": pltpu.SMEM}
-
-# renamed upstream (TPUCompilerParams -> CompilerParams); accept both
-_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
-    getattr(pltpu, "TPUCompilerParams")
+def _memory_space(name: str):
+    from jax.experimental.pallas import tpu as pltpu
+    return {"smem": pltpu.SMEM}[name]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,7 +70,7 @@ class TileSpec:
         if self.memory_space is None:
             return pl.BlockSpec(self.block, self.index_map)
         return pl.BlockSpec(self.block, self.index_map,
-                            memory_space=_MEMORY_SPACES[self.memory_space])
+                            memory_space=_memory_space(self.memory_space))
 
     def bytes_per_step(self, dtype_bytes: int) -> int:
         return math.prod(self.block) * dtype_bytes
@@ -335,14 +333,36 @@ class KernelPipeline:
 
         return wrapped
 
+    def pipeline_stages(self, dtype_bytes: int = 4) -> int | None:
+        """CostEstimate-backed multiple-buffering hint for the grid pipeline.
+
+        Compute-bound kernels keep the classic 2 stages (block k+1's DMA
+        under block k's compute fully hides the memory term). Memory-bound
+        kernels want a deeper in-flight window — the TCDM-burst amortization
+        — so they get 3 stages when a third slot set still fits the VMEM
+        budget. None when the pipeline carries no cost model.
+        """
+        if self.cost is None:
+            return None
+        r = kernel_roofline(self.cost.flops, self.cost.hbm_bytes)
+        if r["memory_s"] <= r["compute_s"]:
+            return 2
+        slot = sum(t.bytes_per_step(dtype_bytes)
+                   for t in (*self.in_tiles, *self.extra_tiles,
+                             *self.out_tiles)
+                   if t.memory_space is None)
+        scratch = self.vmem_bytes(dtype_bytes) - 2 * slot
+        return 3 if 3 * slot + scratch <= VMEM_BUDGET_BYTES else 2
+
     def pallas_call(self, *, interpret: bool = False) -> Callable:
         out_specs = tuple(t.block_spec() for t in self.out_tiles)
-        kwargs: dict[str, Any] = {}
-        if self.cost is not None and hasattr(pl, "CostEstimate"):
-            kwargs["cost_estimate"] = pl.CostEstimate(
-                flops=int(self.cost.flops),
-                bytes_accessed=int(self.cost.hbm_bytes),
-                transcendentals=int(self.cost.transcendentals))
+        call_kw, cp_kw = compat.pallas_hints(
+            cost=(dict(flops=int(self.cost.flops),
+                       bytes_accessed=int(self.cost.hbm_bytes),
+                       transcendentals=int(self.cost.transcendentals))
+                  if self.cost is not None else None),
+            num_stages=self.pipeline_stages(),
+            dimension_semantics=self.dimension_semantics())
         return pl.pallas_call(
             self._hooked_body(),
             grid=tuple(a.size for a in self.grid),
@@ -351,10 +371,9 @@ class KernelPipeline:
             out_specs=out_specs if self.multi_out else out_specs[0],
             out_shape=self.out_shape,
             scratch_shapes=list(self.scratch),
-            compiler_params=_COMPILER_PARAMS(
-                dimension_semantics=self.dimension_semantics()),
+            compiler_params=compat.pallas_compiler_params(cp_kw),
             interpret=interpret,
-            **kwargs)
+            **call_kw)
 
     def __call__(self, *operands, interpret: bool = False):
         return self.pallas_call(interpret=interpret)(*operands)

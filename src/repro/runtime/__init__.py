@@ -1,3 +1,5 @@
+from .engine import (DecodeEngine, StallClock, make_decode_chunk,  # noqa: F401
+                     make_train_chunk)
 from .train_loop import TrainLoop, TrainLoopConfig  # noqa: F401
 from .serve_loop import ServeLoop  # noqa: F401
 from .compile_cache import CompileCache  # noqa: F401

@@ -1,0 +1,263 @@
+"""Device-resident execution engine — burying the host round-trip.
+
+MemPool's headline number is <2% execution stalls at 256 cores: every PE has
+an independent instruction path and the DMA engine streams operands, so
+cores never wait on a slow shared frontend. Our runtime's "frontend" is the
+Python host loop — one dispatch plus one `block_until_ready` per decode
+token (or train step) is the execution stall of the TPU translation, and at
+small models it dominates wall time.
+
+This module rolls the loop onto the device:
+
+* `make_decode_chunk` compiles K decode steps into ONE `lax.scan` program.
+  EOS masking, the per-slot emitted counter, and the all-finished early-exit
+  all live inside the scan (`lax.cond` skips the model body once every slot
+  has finished), so the host syncs once per K tokens instead of once per
+  token. The KV cache and the token/flag buffers are donated
+  (`donate_argnums`), so steady-state decode re-uses the same device
+  allocations chunk after chunk.
+* `make_train_chunk` is the same treatment for training: a scan over a
+  stacked batch of `steps_per_sync` micro-iterations with the whole train
+  state donated; the straggler detector and logger sample at chunk
+  granularity.
+* `StallClock` is the stall-accounting layer: host-sync count, dispatch-gap
+  time (host-side work between one sync finishing and the next dispatch —
+  the paper's execution stall), and device-wait time, reported as a
+  `stall_pct` figure to track against the paper's <2%.
+
+The chunk programs are pure functions of explicit carries — no hidden
+state — so they compose with any decode/train step built by
+`models/steps.py` (or a scripted stand-in in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------------
+# Stall accounting
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StallClock:
+    """Host-side stall ledger for a device-resident loop.
+
+    Call `dispatch()` right before handing work to the device and
+    `sync(*arrays)` when the host blocks on results. The gap between one
+    sync completing and the next dispatch is host-only time — the device
+    sits idle, the direct analogue of MemPool's execution stall. `sync`
+    time itself is the host waiting on the *device* (compute, not stall).
+    """
+
+    host_syncs: int = 0
+    dispatch_gap_s: float = 0.0
+    device_wait_s: float = 0.0
+    _t_start: float = dataclasses.field(default_factory=time.perf_counter)
+    _last_sync_end: float | None = None
+
+    def dispatch(self) -> float:
+        now = time.perf_counter()
+        if self._last_sync_end is not None:
+            self.dispatch_gap_s += now - self._last_sync_end
+        return now
+
+    def sync(self, *arrays) -> float:
+        """Block on `arrays`; returns the post-sync timestamp."""
+        t0 = time.perf_counter()
+        if arrays:
+            jax.block_until_ready(arrays)
+        now = time.perf_counter()
+        self.host_syncs += 1
+        self.device_wait_s += now - t0
+        self._last_sync_end = now
+        return now
+
+    def report(self) -> dict:
+        wall = time.perf_counter() - self._t_start
+        return {
+            "host_syncs": self.host_syncs,
+            "dispatch_gap_s": self.dispatch_gap_s,
+            "device_wait_s": self.device_wait_s,
+            "wall_s": wall,
+            "stall_pct": 100.0 * self.dispatch_gap_s / max(wall, 1e-12),
+        }
+
+
+# ----------------------------------------------------------------------------
+# Scan-compiled multi-token decode
+# ----------------------------------------------------------------------------
+
+
+def decode_chunk_fn(decode_step: Callable, chunk: int,
+                    eos_id: int | None = None) -> Callable:
+    """The pure K-step decode program (unjitted — see `make_decode_chunk`).
+
+    Signature::
+
+        chunk_fn(params, cache, tok, finished, emitted, pos, remaining)
+          -> (cache, tok, finished, emitted, pos, n_steps, all_done, tokens)
+
+    `tok` (B, 1) is the last sampled token, `finished`/`emitted` the per-slot
+    EOS flags and emitted-token counters, `pos` the decode position and
+    `remaining` how many tokens the caller still wants (both traced int32
+    scalars, so one compiled program serves every chunk of a generation).
+    `tokens` is (B, K); only the first `n_steps` columns are valid — padding
+    steps (past `remaining`, or after every slot finished) are skipped with
+    `lax.cond`, i.e. the model body does not run for them.
+
+    Step semantics replicate the per-token host loop bit for bit: `emitted`
+    counts a slot's tokens up to and including its EOS; a finished slot's
+    tokens are masked to EOS before being fed back and recorded.
+    """
+
+    def chunk_fn(params, cache, tok, finished, emitted, pos, remaining):
+        def body(carry, k):
+            cache, tok, finished, emitted, pos, n = carry
+            stop = k >= remaining
+            if eos_id is not None:
+                stop = jnp.logical_or(stop, jnp.all(finished))
+            active = jnp.logical_not(stop)
+
+            def run(operand):
+                cache, tok = operand
+                return decode_step(params, cache,
+                                   {"tokens": tok, "pos": pos})
+
+            def skip(operand):
+                return operand
+
+            new_cache, raw_tok = jax.lax.cond(active, run, skip, (cache, tok))
+            if eos_id is not None:
+                # finished slots (and padding steps) hold EOS regardless of
+                # the argmax — exactly the host loop's masking order
+                mask = jnp.logical_or(finished, stop)
+                out_tok = jnp.where(mask[:, None], eos_id, raw_tok)
+                new_finished = jnp.where(active,
+                                         jnp.logical_or(
+                                             finished,
+                                             out_tok[:, 0] == eos_id),
+                                         finished)
+            else:
+                out_tok = raw_tok
+                new_finished = finished
+            new_emitted = emitted + jnp.where(
+                active, jnp.logical_not(finished).astype(emitted.dtype), 0)
+            step = active.astype(jnp.int32)
+            carry = (new_cache, out_tok, new_finished, new_emitted,
+                     pos + step, n + step)
+            return carry, out_tok
+
+        init = (cache, tok, finished, emitted, pos, jnp.zeros((), jnp.int32))
+        (cache, tok, finished, emitted, pos, n), toks = jax.lax.scan(
+            body, init, jnp.arange(chunk, dtype=jnp.int32))
+        all_done = (jnp.all(finished) if eos_id is not None
+                    else jnp.zeros((), bool))
+        tokens = jnp.moveaxis(toks[..., 0], 0, 1)        # (K, B, 1) -> (B, K)
+        return cache, tok, finished, emitted, pos, n, all_done, tokens
+
+    return chunk_fn
+
+
+def make_decode_chunk(decode_step: Callable, chunk: int, *,
+                      eos_id: int | None = None,
+                      donate: bool = True) -> Callable:
+    """Jit `decode_chunk_fn`, donating the cache/token/flag buffers so
+    steady-state decode runs allocation-free. Donated inputs are invalid
+    after the call — callers must thread the returned buffers forward."""
+    fn = decode_chunk_fn(decode_step, chunk, eos_id)
+    return jax.jit(fn, donate_argnums=(1, 2, 3, 4) if donate else ())
+
+
+class DecodeEngine:
+    """Drives a scan-compiled decode program chunk by chunk.
+
+    One `generate` produces up to `max_new` tokens with `ceil(T / K)` host
+    syncs instead of `T`. Per-chunk wall times land in `chunk_latencies`
+    as `(seconds, steps)` pairs and the stall ledger in `clock`.
+    """
+
+    def __init__(self, decode_step: Callable, chunk: int = 16, *,
+                 eos_id: int | None = None, donate: bool = True):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.chunk = chunk
+        self.eos_id = eos_id
+        self.donate = donate
+        self._chunk_fn = make_decode_chunk(decode_step, chunk,
+                                           eos_id=eos_id, donate=donate)
+        self.clock = StallClock()
+        self.chunk_latencies: list[tuple[float, int]] = []
+
+    def generate(self, params, cache, start_tok: np.ndarray, max_new: int,
+                 start_pos: int = 0):
+        """Returns (out (B, 1 + T) np.int32, cache, finished, emitted).
+
+        `out[:, 0]` is the start token; T <= max_new generation columns
+        follow (shorter when every slot hits EOS early). `cache` is the
+        final donated-through KV cache; the caller's input cache buffer is
+        consumed.
+        """
+        start_tok = np.asarray(start_tok)
+        B = start_tok.shape[0]
+        out = np.empty((B, 1 + max_new), np.int32)       # one host buffer
+        out[:, 0] = start_tok[:, 0]
+        tok = jnp.asarray(start_tok, jnp.int32)
+        finished = jnp.zeros((B,), bool)
+        emitted = jnp.zeros((B,), jnp.int32)
+        pos = jnp.asarray(start_pos, jnp.int32)
+        self.clock = StallClock()
+        self.chunk_latencies = []
+        w = 0
+        while w < max_new:
+            remaining = max_new - w
+            t0 = self.clock.dispatch()
+            (cache, tok, finished, emitted, pos, n, all_done,
+             toks) = self._chunk_fn(params, cache, tok, finished, emitted,
+                                    pos, jnp.asarray(remaining, jnp.int32))
+            self.clock.sync(n, all_done, toks)
+            dt = time.perf_counter() - t0
+            n = int(n)
+            self.chunk_latencies.append((dt, n))
+            out[:, 1 + w:1 + w + n] = np.asarray(toks)[:, :n]
+            w += n
+            if n < min(self.chunk, remaining) or bool(all_done):
+                break
+        return (out[:, :1 + w], cache, np.asarray(finished),
+                np.asarray(emitted, np.int64))
+
+
+# ----------------------------------------------------------------------------
+# Scan-compiled multi-step training
+# ----------------------------------------------------------------------------
+
+
+def make_train_chunk(train_step: Callable, *, donate: bool = True) -> Callable:
+    """Roll `train_step` into a scan over a stacked batch.
+
+    `chunk(state, batches)` runs one step per leading-dim slice of
+    `batches` and returns `(state, metrics)` with every metric stacked
+    (shape (k, ...)). The train state is donated, so steady-state training
+    re-uses the param/opt-state buffers; the chunk length is inferred from
+    the stacked batch (jit re-specializes per distinct length — at most two
+    per run: the steady chunk and the final partial one).
+    """
+
+    def chunk(state, batches):
+        def body(s, b):
+            return train_step(s, b)
+        return jax.lax.scan(body, state, batches)
+
+    return jax.jit(chunk, donate_argnums=(0,) if donate else ())
+
+
+def stack_batches(batches: list) -> dict:
+    """Stack host/device batch pytrees on a new leading step axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)

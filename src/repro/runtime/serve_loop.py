@@ -5,9 +5,10 @@ from __future__ import annotations
 import time
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.runtime.engine import DecodeEngine, StallClock
 
 
 class ServeLoop:
@@ -20,10 +21,19 @@ class ServeLoop:
     `eos_id` (None disables): a slot that emits EOS is *finished* — its
     subsequent tokens are masked to EOS, it stops counting toward emitted
     lengths, and the loop stops early once every slot has finished.
+
+    `chunk` picks the execution engine: 1 (default) is the per-token host
+    loop — one dispatch + one host sync per token; K > 1 compiles K decode
+    steps into one `lax.scan` program with donated cache/token buffers
+    (runtime/engine.py), so the host syncs once per K tokens. Both paths
+    produce bit-identical tokens, EOS behaviour, and emitted counts; the
+    engine path additionally leaves the input `cache` buffer consumed
+    (donated) after `generate`.
     """
 
     def __init__(self, decode_step: Callable, params, cache, batch_size: int,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None, chunk: int = 1,
+                 donate: bool = True, engine: DecodeEngine | None = None):
         self.decode_step = decode_step
         self.params = params
         self.cache = cache
@@ -32,22 +42,38 @@ class ServeLoop:
         self.latencies: list[float] = []
         self.emitted_lengths: np.ndarray | None = None
         self._finished: np.ndarray | None = None
+        self._chunk_steps: list[int] | None = None
+        self.clock = StallClock()
+        # a prebuilt engine (e.g. cached on a compiled program so its scan
+        # program compiles once, not per generate) wins over `chunk`
+        if engine is None and chunk > 1:
+            engine = DecodeEngine(decode_step, chunk, eos_id=eos_id,
+                                  donate=donate)
+        self._engine = engine
+        self.chunk = engine.chunk if engine is not None else chunk
 
     def generate(self, prompt_tokens: np.ndarray, max_new: int,
                  start_pos: int = 0) -> np.ndarray:
         """prompt_tokens: (B, 1) last prompt token per slot."""
+        if self._engine is not None:
+            return self._generate_chunked(prompt_tokens, max_new, start_pos)
+        prompt_tokens = np.asarray(prompt_tokens)
+        B = prompt_tokens.shape[0]
+        out = np.empty((B, 1 + max_new), np.int32)       # one host buffer
+        out[:, 0] = prompt_tokens[:, 0]
         tok = jnp.asarray(prompt_tokens, jnp.int32)
-        out = [np.asarray(tok)]
-        B = out[0].shape[0]
         finished = np.zeros(B, bool)
         emitted = np.zeros(B, np.int64)
         pos = start_pos
+        self.latencies = []
+        self.clock = StallClock()
+        w = 0
         for _ in range(max_new):
-            t0 = time.perf_counter()
+            t0 = self.clock.dispatch()
             self.cache, tok = self.decode_step(
                 self.params, self.cache,
                 {"tokens": tok, "pos": jnp.asarray(pos, jnp.int32)})
-            jax.block_until_ready(tok)
+            self.clock.sync(tok)
             self.latencies.append(time.perf_counter() - t0)
             step_tok = np.asarray(tok)
             emitted += ~finished
@@ -56,26 +82,55 @@ class ServeLoop:
                 step_tok = np.where(finished[:, None], self.eos_id, step_tok)
                 finished |= step_tok[:, 0] == self.eos_id
                 tok = jnp.asarray(step_tok)
-            out.append(step_tok)
+            out[:, 1 + w] = step_tok[:, 0]
+            w += 1
             pos += 1
             if self.eos_id is not None and finished.all():
                 break
         self.emitted_lengths = emitted
         self._finished = finished
-        return np.concatenate(out, axis=1)
+        self._chunk_steps = None
+        return out[:, :1 + w]
+
+    def _generate_chunked(self, prompt_tokens, max_new: int,
+                          start_pos: int) -> np.ndarray:
+        out, cache, finished, emitted = self._engine.generate(
+            self.params, self.cache, prompt_tokens, max_new, start_pos)
+        self.cache = cache
+        self.clock = self._engine.clock
+        self.latencies = [dt for dt, _ in self._engine.chunk_latencies]
+        self._chunk_steps = [n for _, n in self._engine.chunk_latencies]
+        self.emitted_lengths = emitted
+        self._finished = finished
+        return out
 
     def stats(self) -> dict:
-        """Latency stats over the post-warmup steps (first step dropped —
-        it carries compilation). With zero or one recorded step there are
-        no measured samples, so throughput/percentiles report 0.0 rather
-        than the fake `1/epsilon` numbers an empty array would produce;
-        `decode_steps` counts the same warmup-dropped array the percentiles
-        are computed over. After a `generate`, `emitted_per_slot` reports
-        how many tokens each slot emitted before (and including) its EOS,
-        and `finished_slots` how many slots hit EOS.
+        """Latency stats over the post-warmup steps (first step — or first
+        chunk, on the engine path — dropped: it carries compilation). With
+        zero or one recorded sample there are no measured steps, so
+        throughput/percentiles report 0.0 rather than the fake `1/epsilon`
+        numbers an empty array would produce; `decode_steps` counts the
+        decode steps covered by the measured samples. After a `generate`,
+        `emitted_per_slot` reports how many tokens each slot emitted before
+        (and including) its EOS, and `finished_slots` how many slots hit
+        EOS. `stall` carries the StallClock ledger (host-sync count,
+        dispatch-gap and device-wait seconds, stall_pct).
         """
         lat = np.asarray(self.latencies[1:], np.float64)
-        if lat.size == 0:
+        if self._chunk_steps is not None:
+            steps = np.asarray(self._chunk_steps[1:], np.int64)
+            tokens = int(steps.sum())
+            if lat.size == 0 or tokens == 0:
+                st = {"decode_steps": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                      "tokens_per_s_per_slot": 0.0}
+            else:
+                per_tok = lat / np.maximum(steps, 1)
+                st = {"decode_steps": tokens,
+                      "p50_ms": float(np.percentile(per_tok, 50) * 1e3),
+                      "p99_ms": float(np.percentile(per_tok, 99) * 1e3),
+                      "tokens_per_s_per_slot": float(
+                          tokens / max(lat.sum(), 1e-9))}
+        elif lat.size == 0:
             st = {"decode_steps": 0, "p50_ms": 0.0, "p99_ms": 0.0,
                   "tokens_per_s_per_slot": 0.0}
         else:
@@ -83,6 +138,8 @@ class ServeLoop:
                   "p50_ms": float(np.percentile(lat, 50) * 1e3),
                   "p99_ms": float(np.percentile(lat, 99) * 1e3),
                   "tokens_per_s_per_slot": float(1.0 / max(lat.mean(), 1e-9))}
+        st["chunk"] = self.chunk
+        st["stall"] = self.clock.report()
         if self.emitted_lengths is not None:
             st["emitted_per_slot"] = [int(n) for n in self.emitted_lengths]
             if self.eos_id is not None:

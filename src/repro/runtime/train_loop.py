@@ -5,6 +5,12 @@ prefetch, compiled train step (models/steps.py under the RegionPlan),
 async checkpointing (checkpoint/), and the health monitors a 1000-node run
 needs: per-step wall-time straggler detection, preemption-triggered final
 checkpoint, and auto-resume.
+
+With `steps_per_sync > 1` (and a `train_chunk` built by
+`runtime/engine.make_train_chunk`), the loop dispatches a scan of K steps
+per host round-trip: the straggler detector and logger sample at chunk
+granularity, the host syncs O(total/K) times, and the train state is
+donated through the chunk so steady-state training re-uses its buffers.
 """
 
 from __future__ import annotations
@@ -14,10 +20,10 @@ import signal
 import time
 from typing import Callable
 
-import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.runtime.engine import StallClock, stack_batches
 
 
 @dataclasses.dataclass
@@ -30,6 +36,9 @@ class TrainLoopConfig:
     # straggler detection: flag steps slower than mean + z * std
     straggler_z: float = 3.0
     straggler_warmup: int = 10
+    # device-resident chunking: steps rolled into one scan per host sync
+    # (needs a train_chunk callable; 1 = the classic per-step loop)
+    steps_per_sync: int = 1
 
 
 class StragglerDetector:
@@ -56,11 +65,18 @@ class StragglerDetector:
         return False
 
 
+def _crossed(prev: int, step: int, every: int) -> bool:
+    """Did [prev, step] cross a multiple of `every`? (chunk-safe cadence)"""
+    return step // max(every, 1) > prev // max(every, 1)
+
+
 class TrainLoop:
     def __init__(self, cfg: TrainLoopConfig, train_step: Callable,
-                 state, batch_iter, *, state_shardings=None):
+                 state, batch_iter, *, state_shardings=None,
+                 train_chunk: Callable | None = None):
         self.cfg = cfg
         self.train_step = train_step
+        self.train_chunk = train_chunk
         self.state = state
         self.batch_iter = batch_iter
         self.state_shardings = state_shardings
@@ -69,6 +85,7 @@ class TrainLoop:
         self.straggler = StragglerDetector(cfg.straggler_z,
                                            cfg.straggler_warmup)
         self.metrics_log: list[dict] = []
+        self.clock = StallClock()
         self._preempted = False
 
     # -- fault handling -----------------------------------------------------
@@ -89,26 +106,44 @@ class TrainLoop:
         return step
 
     # -- main loop ------------------------------------------------------------
+    def _next_batch(self):
+        batch = next(self.batch_iter)
+        if isinstance(batch, tuple):           # (step_idx, batch) feeds
+            batch = batch[1]
+        return batch
+
     def run(self, start_step: int | None = None) -> dict:
         self._install_preemption_handler()
         step = self.maybe_resume() if start_step is None else start_step
+        k_cfg = max(self.cfg.steps_per_sync, 1)
+        chunked = k_cfg > 1 and self.train_chunk is not None
+        self.clock = StallClock()
         t_loop = time.perf_counter()
         while step < self.cfg.total_steps and not self._preempted:
-            batch = next(self.batch_iter)
-            if isinstance(batch, tuple):       # (step_idx, batch) feeds
-                batch = batch[1]
-            t0 = time.perf_counter()
-            self.state, metrics = self.train_step(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
+            k = min(k_cfg, self.cfg.total_steps - step) if chunked else 1
+            if chunked and k > 1:
+                batches = [self._next_batch() for _ in range(k)]
+                t0 = self.clock.dispatch()
+                self.state, metrics = self.train_chunk(
+                    self.state, stack_batches(batches))
+                self.clock.sync(metrics["loss"])
+                loss = float(np.asarray(metrics["loss"])[-1])
+            else:
+                batch = self._next_batch()
+                t0 = self.clock.dispatch()
+                self.state, metrics = self.train_step(self.state, batch)
+                self.clock.sync(metrics["loss"])
+                loss = float(np.asarray(metrics["loss"]).reshape(-1)[-1])
             dt = time.perf_counter() - t0
-            step += 1
+            prev, step = step, step + k
             slow = self.straggler.observe(step, dt)
-            if step % self.cfg.log_every == 0 or slow:
-                row = {"step": step, "seconds": dt,
-                       "loss": float(metrics["loss"]),
+            if _crossed(prev, step, self.cfg.log_every) or slow:
+                row = {"step": step, "seconds": dt, "loss": loss,
                        "straggler": bool(slow)}
+                if k > 1:
+                    row["steps_in_chunk"] = k
                 self.metrics_log.append(row)
-            if step % self.cfg.checkpoint_every == 0:
+            if _crossed(prev, step, self.cfg.checkpoint_every):
                 self.ckpt.save(step, self.state)
         # final checkpoint on natural end or preemption
         self.ckpt.save(step, self.state, block=True)
@@ -117,4 +152,6 @@ class TrainLoop:
                 "preempted": self._preempted,
                 "wall_seconds": time.perf_counter() - t_loop,
                 "straggler_events": self.straggler.events,
+                "stall": self.clock.report(),
+                "steps_per_sync": k_cfg if chunked else 1,
                 "metrics": self.metrics_log}

@@ -4,6 +4,7 @@ import time
 
 import jax
 import numpy as np
+import pytest
 
 from repro.core import compat
 from repro.data import DoubleBufferedFeed, Distributor, Splitter, SyntheticLMStream
@@ -76,3 +77,58 @@ def test_double_buffered_feed_overlaps():
     # serial would be >= 10 * 0.02; overlap should beat it comfortably
     assert elapsed < 0.18, elapsed
     assert len(feed.transfer_seconds) >= 5
+
+
+def test_double_buffered_feed_propagates_producer_error():
+    def make(step):
+        if step == 2:
+            raise ValueError("bad batch")
+        return {"step": step}
+
+    feed = DoubleBufferedFeed(make, depth=2)
+    # batches queued before the failure still arrive, in order
+    assert next(feed)[0] == 0
+    assert next(feed)[0] == 1
+    with pytest.raises(RuntimeError, match="producer failed") as ei:
+        next(feed)
+    assert isinstance(ei.value.__cause__, ValueError)
+    # the error is sticky: later next() calls re-raise instead of blocking
+    with pytest.raises(RuntimeError, match="producer failed"):
+        next(feed)
+    feed.close()
+
+
+def test_double_buffered_feed_error_before_first_batch():
+    def make(step):
+        raise OSError("disk gone")
+
+    feed = DoubleBufferedFeed(make, depth=2)
+    with pytest.raises(RuntimeError, match="producer failed"):
+        next(feed)
+    feed.close()
+
+
+def test_double_buffered_feed_close_idempotent():
+    feed = DoubleBufferedFeed(lambda step: {"step": step}, depth=2)
+    next(feed)
+    feed.close()
+    feed.close()                            # second close is a no-op
+    assert not feed._thread.is_alive()
+
+
+def test_double_buffered_feed_stall_report():
+    def make(step):
+        time.sleep(0.005)
+        return {"step": step}
+
+    feed = DoubleBufferedFeed(make, depth=2)
+    for _ in range(4):
+        next(feed)
+        time.sleep(0.01)                    # compute longer than transfer
+    report = feed.stall_report()
+    feed.close()
+    assert len(feed.consumer_wait_seconds) >= 4
+    assert report["produce_s"] > 0
+    # steady state: transfers hide under compute
+    assert report["overlap_pct"] > 50.0
+    assert report["hidden_s"] <= report["produce_s"]
