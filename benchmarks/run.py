@@ -23,7 +23,9 @@ Flags:
 Whenever the table1 section runs, its rows are also persisted to
 `BENCH_table1.json` at the repo root — the perf-trajectory record the CI
 smoke job refreshes on every run — and a `fused-vs-unfused:` summary line
-is printed for the fused kernel path.
+is printed for the fused kernel path. The decode (K=1 vs K=16 engine) and
+serve (continuous vs static batching) rows and their `decode-throughput:`
+/ `serve-continuous:` summary lines ride along in the same record.
 """
 
 from __future__ import annotations
@@ -44,11 +46,12 @@ from benchmarks import (bench_decode_throughput,  # noqa: E402
                         bench_fig4_interconnect, bench_fig5_hybrid,
                         bench_fig13_scaling, bench_fig14_breakdown,
                         bench_fig15_double_buffer, bench_fig16_energy,
-                        bench_table1_kernels)
+                        bench_serve_continuous, bench_table1_kernels)
 
 MODULES = [
     ("table1", bench_table1_kernels),
     ("decode", bench_decode_throughput),
+    ("serve", bench_serve_continuous),
     ("fig4", bench_fig4_interconnect),
     ("fig5", bench_fig5_hybrid),
     ("fig13", bench_fig13_scaling),
@@ -99,6 +102,32 @@ def _decode_comparison_line(rows: list[dict]) -> str | None:
             f" {us1 / max(us16, 1e-9):.2f}x per-token speedup")
 
 
+def _serve_rows(results: dict) -> list[dict]:
+    section = results["sections"].get("serve")
+    if not section or section["status"] != "ok":
+        return []
+    return section["rows"]
+
+
+def _serve_comparison_line(rows: list[dict]) -> str | None:
+    """Continuous vs static batching summary from the serve section."""
+    by_name = {}
+    for r in rows:
+        kv = dict(p.split("=", 1) for p in r["derived"].split(";"))
+        by_name[r["name"].removeprefix("serve/")] = kv
+    if "continuous" not in by_name or "static" not in by_name:
+        return None
+    c, s = by_name["continuous"], by_name["static"]
+    tps_c, tps_s = float(c["tokens_per_s"]), float(s["tokens_per_s"])
+    occ_c, occ_s = float(c["occupancy_pct"]), float(s["occupancy_pct"])
+    return (f"# serve-continuous: {tps_c:.1f} tok/s, occ {occ_c:.1f}% vs"
+            f" static {tps_s:.1f} tok/s, occ {occ_s:.1f}% —"
+            f" {tps_c / max(tps_s, 1e-9):.2f}x tok/s,"
+            f" {occ_c / max(occ_s, 1e-9):.2f}x occupancy;"
+            f" p99 {float(c['p99_ms']):.0f}ms vs {float(s['p99_ms']):.0f}ms"
+            f" ({c['requests']} reqs, {c['slots']} slots)")
+
+
 def _persist_table1(results: dict, repeat: int) -> Path | None:
     section = results["sections"].get("table1")
     if not section or section["status"] != "ok":
@@ -116,6 +145,14 @@ def _persist_table1(results: dict, repeat: int) -> Path | None:
         if line:
             record["decode_summary"] = line.removeprefix(
                 "# decode-throughput: ")
+    serve = _serve_rows(results)
+    if serve:
+        # continuous vs static batching rows ride along too
+        record["serve_continuous"] = serve
+        line = _serve_comparison_line(serve)
+        if line:
+            record["serve_summary"] = line.removeprefix(
+                "# serve-continuous: ")
     path.write_text(json.dumps(record, indent=2))
     return path
 
@@ -155,6 +192,11 @@ def main(argv: list[str] | None = None) -> None:
         dec_line = _decode_comparison_line(decode_rows)
         if dec_line:
             print(dec_line)
+    serve_rows = _serve_rows(results)
+    if serve_rows:
+        srv_line = _serve_comparison_line(serve_rows)
+        if srv_line:
+            print(srv_line)
     table1 = results["sections"].get("table1")
     if table1 and table1["status"] == "ok":
         cmp_line = _fused_comparison_line(table1["rows"])

@@ -11,6 +11,10 @@ host-sync count and `stall_pct`, the host-side dispatch gap as a fraction
 of wall time — the paper's execution-stall figure.
 
     PYTHONPATH=src python examples/serve_batched.py --batch 8 --new 32
+
+This is the fixed-batch path: every slot runs to the slowest request.
+For request-level serving — submit/stream/cancel against a slot pool with
+continuous batching — see `examples/serve_continuous.py` (ServeSession).
 """
 
 import argparse

@@ -21,7 +21,7 @@ from typing import Any
 
 import jax
 
-from repro.cluster import Cluster, ServeProgram, TrainProgram
+from repro.cluster import Cluster, ServeSessionProgram, TrainProgram
 
 _UNSET = object()
 
@@ -63,14 +63,18 @@ def serve(arch: str, params=None, *, batch: int = 4, max_seq: int = 64,
           chunk: int = 1) -> dict:
     """One-call batched greedy decoding. Returns tokens + latency stats.
 
-    Shim over `Cluster(...).compile(ServeProgram(...)).run(params)`.
-    `chunk` defaults to 1 — the legacy per-token loop with per-token
-    latency samples — unlike `ServeProgram`, whose default (16) runs the
-    scan-compiled engine; pass chunk=K here to opt the shim into it (the
-    decoded tokens are bit-identical either way).
+    Shim over the request-level serving API: opens a `ServeSession`
+    (`Cluster(...).compile(ServeSessionProgram(...))`), submits one batch
+    of requests (one per slot), and drains — the legacy return shape
+    (tokens array + ServeLoop-style stats) is preserved, and the decoded
+    tokens are bit-identical to the old fixed-batch `ServeProgram` path.
+    `chunk` is the decode-steps-per-host-sync knob (1 = one sync per
+    token, the legacy default; K > 1 buries K steps in one device
+    program). New code should open a session directly and use
+    `submit`/`stream`/`drain`.
     """
     cluster = Cluster(arch + ("-smoke" if smoke else ""))
-    program = cluster.compile(ServeProgram(
-        batch=batch, max_seq=max_seq, max_new=max_new, seed=seed,
+    program = cluster.compile(ServeSessionProgram(
+        slots=batch, max_seq=max_seq, max_new=max_new, seed=seed,
         chunk=chunk))
     return program.run(params=params)

@@ -12,8 +12,9 @@ from repro.cluster.policy import (KernelPolicy, as_policy,  # noqa: F401
                                   use_policy)
 
 _SESSION_EXPORTS = ("Cluster", "Program", "TrainProgram", "ServeProgram",
-                    "DryRunProgram", "BenchProgram", "CompiledTrain",
-                    "CompiledServe", "CompiledDryRun", "CompiledBench")
+                    "ServeSessionProgram", "DryRunProgram", "BenchProgram",
+                    "CompiledTrain", "CompiledServe", "CompiledServeSession",
+                    "CompiledDryRun", "CompiledBench")
 
 __all__ = list(_SESSION_EXPORTS) + [
     "KernelPolicy", "as_policy", "current_policy", "default_policy",

@@ -58,13 +58,20 @@ def layer_gather_specs(cfg, mesh, rules):
 
 
 def build_cell(cfg, shape, mesh, rules, fsdp_gather: bool = False,
-               policy=None, decode_chunk: int = 1):
+               policy=None, decode_chunk: int = 1, session: bool = False,
+               max_prompt: int = 8):
     """Returns (fn, args_sds, in_shardings, out_shardings, donate).
 
     `decode_chunk > 1` (decode shapes only) builds the execution-engine
     cell instead of the single-step one: K decode steps rolled into one
     `lax.scan` with donated cache/token/flag buffers — the program the
     dry-run lowers then mirrors what `ServeProgram(chunk=K)` runs.
+
+    `session=True` (decode shapes) builds the continuous-batching session
+    cell instead: the K-step slot-scheduled chunk over the donated pool
+    state (per-slot positions, prompt buffers, budgets — see
+    `engine.session_chunk_fn`), mirroring what a compiled
+    `ServeSessionProgram` steps between refills.
     """
     batch_sds = input_specs(cfg, shape)
     batch_log = batch_logical(cfg, shape)
@@ -95,6 +102,28 @@ def build_cell(cfg, shape, mesh, rules, fsdp_gather: bool = False,
     cache_sh = shardings_for(cache_sds, cache_log, mesh, rules)
     tok_sh = NamedSharding(
         mesh, rules.spec_for(("batch", None), (shape.global_batch, 1), mesh))
+    if session:
+        from repro.runtime import engine
+
+        step = steps.make_decode_step(cfg, max_seq=shape.seq_len,
+                                      policy=policy)
+        fn = engine.session_chunk_fn(step, decode_chunk)
+        B = shape.global_batch
+        # the pool-state spec is whatever init_session_state builds — one
+        # source of truth, so engine-side field changes propagate here
+        state_sds = jax.eval_shape(
+            lambda c: engine.init_session_state(c, B, max_prompt), cache_sds)
+        slot_sh = NamedSharding(mesh, rules.spec_for(("batch",), (B,), mesh))
+        buf_sh = lambda n: NamedSharding(
+            mesh, rules.spec_for(("batch", None), (B, n), mesh))
+        state_sh = {k: (cache_sh if k == "cache" else
+                        buf_sh(1) if k == "tok" else
+                        buf_sh(max_prompt) if k == "prompt_buf" else slot_sh)
+                    for k in state_sds}
+        scalar_sh = NamedSharding(mesh, jax.sharding.PartitionSpec())
+        out_sh = (state_sh, buf_sh(decode_chunk), buf_sh(decode_chunk),
+                  slot_sh, scalar_sh)
+        return fn, (params_sds, state_sds), (params_sh, state_sh), out_sh, (1,)
     if decode_chunk > 1:
         from repro.runtime import engine
         step = steps.make_decode_step(cfg, max_seq=shape.seq_len,

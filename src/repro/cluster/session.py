@@ -81,6 +81,28 @@ class ServeProgram:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSessionProgram:
+    """Request-level serving: a slot pool with continuous batching.
+
+    Compiles to a `CompiledServeSession`; `open()` returns a live
+    `ServeSession` with `submit(prompt, max_new) -> RequestHandle`,
+    `poll()`/`stream()` for incremental tokens, `cancel(handle)`, and
+    `drain()`. `run()` is the one-shot path (fill the pool with one
+    batch, drain, legacy `ServeProgram`-shaped result).
+    """
+
+    slots: int = 4                         # slot-pool size (batch rows)
+    max_seq: int = 64
+    max_prompt: int = 8                    # per-slot prompt buffer length
+    max_new: int = 16                      # one-shot run() / submit default
+    seed: int = 0
+    eos_id: int | None = None
+    chunk: int = 16                        # decode steps per host sync
+    max_queue: int | None = None           # bounded-queue backpressure
+    admission: str = "fifo"                # or "longest_prefix"
+
+
+@dataclasses.dataclass(frozen=True)
 class DryRunProgram:
     """Lower + compile one (arch x shape) cell on this cluster's mesh and
     extract memory/cost/collective analysis — no allocation."""
@@ -89,6 +111,8 @@ class DryRunProgram:
     fsdp_gather: bool = False
     decode_chunk: int = 1                  # decode shapes: lower the K-step
     #   scan-compiled engine cell instead of the single-step one
+    session: bool = False                  # decode shapes: lower the slot-
+    #   scheduled session cell (donated pool state) instead
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +213,7 @@ class Cluster:
         """Program spec -> compiled Program, memoized in the compile cache
         keyed on (spec, arch, mesh, policy knobs)."""
         builders = {TrainProgram: CompiledTrain, ServeProgram: CompiledServe,
+                    ServeSessionProgram: CompiledServeSession,
                     DryRunProgram: CompiledDryRun, BenchProgram: CompiledBench}
         try:
             builder = builders[type(spec)]
@@ -417,6 +442,123 @@ class CompiledServe(Program):
         return result
 
 
+class CompiledServeSession(Program):
+    """Request-level serving: slot pool + scheduler + compiled session cell.
+
+    `open()` hands out a live `ServeSession`; `run()` is the one-shot path
+    that fills every slot with one batch of requests, drains, and returns
+    the legacy `ServeProgram` result shape — bit-identical tokens for
+    single-batch submission (api.serve routes through this).
+    """
+
+    kind = "serve_session"
+
+    def __init__(self, cluster, spec: ServeSessionProgram, policy):
+        super().__init__(cluster, spec, policy)
+        cfg = cluster._require_arch("ServeSessionProgram")
+        if spec.admission not in ("fifo", "longest_prefix"):
+            raise ValueError(f"unknown admission policy {spec.admission!r}")
+        # raw (unjitted) per-slot-position decode step; the session chunk
+        # jits the whole K-step program around it. Built once here so every
+        # session opened on this program shares the compiled cell.
+        step = steps.make_decode_step(cfg, max_seq=spec.max_seq,
+                                      policy=policy)
+        self._chunk_fn = engine.make_session_chunk(step, spec.chunk,
+                                                   eos_id=spec.eos_id)
+        self._refill_fn = engine.make_session_refill(
+            cache_zero=steps.zero_cache_slots)
+        self._last_session = None
+
+    def init_params(self, seed: int | None = None):
+        cfg = self.cluster.arch
+        seed = self.spec.seed if seed is None else seed
+        return steps.init_params(cfg, jax.random.PRNGKey(seed),
+                                 max_seq=self.spec.max_seq)
+
+    def open(self, params=None):
+        """A fresh `ServeSession` over this compiled cell (own slot pool,
+        queue, scheduler, and stall clock)."""
+        from repro.runtime import ServeSession
+
+        cfg, spec = self.cluster.arch, self.spec
+        if params is None:
+            params = self.init_params()
+        cache = steps.init_cache(cfg, spec.slots,
+                                 steps.decode_cache_len(cfg, spec.max_seq))
+        state = engine.init_session_state(cache, spec.slots, spec.max_prompt)
+        sess = ServeSession(self._chunk_fn, self._refill_fn, params, state,
+                            n_slots=spec.slots, chunk=spec.chunk,
+                            max_prompt=spec.max_prompt, max_seq=spec.max_seq,
+                            eos_id=spec.eos_id, max_queue=spec.max_queue,
+                            admission=spec.admission)
+        self._last_session = sess
+        return sess
+
+    def run(self, params=None, prompt=None, max_new: int | None = None) -> dict:
+        """One-shot: submit one batch (one request per slot), drain, return
+        the legacy `{"tokens": (B, 1+max_new), "stats": ...}` shape.
+
+        Without `prompt`, slot i's request is the single start token 0 —
+        exactly the `ServeProgram` path, bit for bit (tokens, EOS
+        masking/early-stop, and `emitted_per_slot`). With `prompt` (B, P),
+        the prompt is prefilled per slot and the first sampled token lands
+        in column 0, as `ServeProgram.run(prompt=...)` does.
+        """
+        spec = self.spec
+        max_new = spec.max_new if max_new is None else max_new
+        sess = self.open(params=params)
+        B = spec.slots
+        if prompt is None:
+            rows = [np.zeros(1, np.int32)] * B
+            per_req = max_new
+        else:
+            prompt = np.asarray(prompt)
+            rows = [prompt[i] for i in range(B)]
+            # +1: the last prefill step's output (legacy column 0) counts
+            # toward the session budget but not toward legacy emitted
+            per_req = max_new + 1
+        handles = [sess.submit(r, per_req) for r in rows]
+        sess_stats = sess.drain()
+        toks = [h.result() for h in handles]
+        if prompt is None:
+            toks = [np.concatenate([[0], t]).astype(np.int32) for t in toks]
+        w = max(t.size for t in toks)
+        pad = spec.eos_id if spec.eos_id is not None else 0
+        out = np.full((B, w), pad, np.int32)
+        for i, t in enumerate(toks):
+            out[i, :t.size] = t
+        stats = self._legacy_stats(sess, handles,
+                                   gen_offset=0 if prompt is None else 1)
+        stats["session"] = sess_stats
+        result = {"tokens": out, "stats": stats}
+        self._last_run = {"stats": {k: v for k, v in stats.items()
+                                    if k != "session"},
+                          "session": sess_stats,
+                          "tokens_shape": tuple(out.shape)}
+        return result
+
+    def _legacy_stats(self, sess, handles, gen_offset: int) -> dict:
+        """`ServeLoop.stats()`-shaped dict from a drained one-shot session
+        (per-token percentiles over post-warmup chunks, stall ledger,
+        emitted_per_slot in legacy generation-step counting)."""
+        from repro.runtime.serve_loop import chunked_latency_stats
+
+        st = chunked_latency_stats(sess.chunk_latencies)
+        st["chunk"] = sess.chunk
+        st["stall"] = sess.clock.report()
+        st["emitted_per_slot"] = [int(h.tokens.size - gen_offset)
+                                  for h in handles]
+        if self.spec.eos_id is not None:
+            st["finished_slots"] = sum(h.hit_eos for h in handles)
+        return st
+
+    def report(self) -> dict:
+        out = super().report()
+        if self._last_session is not None:
+            out["session"] = self._last_session.stats()
+        return out
+
+
 class CompiledDryRun(Program):
     kind = "dryrun"
 
@@ -439,7 +581,8 @@ class CompiledDryRun(Program):
         with use_policy(self.policy):
             fn, args, in_sh, out_sh, donate = cells.build_cell(
                 cfg, shape, mesh, rules, fsdp_gather=spec.fsdp_gather,
-                policy=self.policy, decode_chunk=spec.decode_chunk)
+                policy=self.policy, decode_chunk=spec.decode_chunk,
+                session=spec.session)
             t0 = time.time()
             with compat.set_mesh(mesh):
                 lowered = jax.jit(fn, in_shardings=in_sh,

@@ -440,9 +440,20 @@ def decode_attention(q, k_cache, v_cache, pos, *, n_kv: int,
 
 
 def update_cache(k_cache, v_cache, k_new, v_new, pos, *, rolling: bool = False):
-    """Insert (B, 1, KV, hd) new keys/values at position `pos` (scalar)."""
+    """Insert (B, 1, KV, hd) new keys/values at position `pos`.
+
+    `pos` is a scalar (every slot writes the same row — the batch-program
+    path) or a (B,) vector (each slot writes its own row — the continuous-
+    batching session path, where slots sit at independent decode positions).
+    """
     sc = k_cache.shape[1]
     slot = jnp.asarray(pos) % sc if rolling else jnp.asarray(pos)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot, axis=1)
-    return k_cache, v_cache
+    if slot.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot,
+                                                      axis=1)
+        return k_cache, v_cache
+    upd = jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0))
+    return upd(k_cache, k_new, slot), upd(v_cache, v_new, slot)

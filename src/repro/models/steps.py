@@ -122,6 +122,30 @@ def init_cache(cfg, B: int, cache_len: int):
     return init_tree(cache_specs(cfg, B, cache_len), jax.random.PRNGKey(0))
 
 
+def zero_cache_slots(cache, mask):
+    """Zero the per-slot decode state of masked batch rows.
+
+    `mask` is (B,) bool. Needed when a slot is recycled for a new request:
+    KV rows beyond the (reset) position are masked out by decode attention
+    anyway, but recurrent block states (mLSTM/sLSTM/RG-LRU matrices, conv
+    tails) carry the old request's activations and must be cleared. Stacked
+    super-block leaves carry a leading `layers` axis, so the batch axis is
+    1 under `blocks` and 0 under `rem`.
+    """
+    def at_axis(axis):
+        def one(c):
+            shape = [1] * c.ndim
+            shape[axis] = mask.shape[0]
+            return jnp.where(mask.reshape(shape),
+                             jnp.zeros((), c.dtype), c)
+        return one
+
+    out = {"blocks": jax.tree.map(at_axis(1), cache["blocks"])}
+    if "rem" in cache:
+        out["rem"] = jax.tree.map(at_axis(0), cache["rem"])
+    return out
+
+
 # ----------------------------------------------------------------------------
 # Forward
 # ----------------------------------------------------------------------------
@@ -327,18 +351,30 @@ def make_prefill_step(cfg, *, policy=None):
 def make_decode_step(cfg, max_seq: int = 1 << 30, *, policy=None):
     """`max_seq` is the workload's logical context length; caches shorter
     than it (windowed archs) operate as rolling buffers. `policy` pins the
-    kernel policy the step traces under (None -> ambient)."""
+    kernel policy the step traces under (None -> ambient).
+
+    `batch["pos"]` is a scalar (all slots at the same position — the batch
+    program) or a (B,) vector (per-slot positions — the continuous-batching
+    session, where each slot is mid-way through its own request)."""
     pol = kpolicy.as_policy(policy) if policy is not None else None
     pattern, n_super, remainder = block_plan(cfg)
 
     def _body(params, cache, batch):
-        tokens, pos = batch["tokens"], batch["pos"]
+        tokens, pos = batch["tokens"], jnp.asarray(batch["pos"])
         B = tokens.shape[0]
         x = jnp.take(params["tok_embed"], tokens, axis=0)       # (B,1,d)
         if cfg.family == "encdec":
-            x = x + jax.lax.dynamic_slice_in_dim(
-                params["dec_pos"], pos, 1, axis=0).astype(x.dtype)
-        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+            if pos.ndim == 0:
+                dp = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1,
+                                                  axis=0)
+            else:
+                dp = jnp.take(params["dec_pos"], pos, axis=0)[:, None]
+            x = x + dp.astype(x.dtype)
+        if pos.ndim == 0:
+            positions = jnp.broadcast_to(pos[None, None], (B, 1))
+        else:
+            positions = pos[:, None]
+        positions = positions.astype(jnp.int32)
         ctx = {"positions": positions, "rope": cfg.family != "encdec",
                "max_seq": max_seq}
 

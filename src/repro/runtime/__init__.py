@@ -1,5 +1,8 @@
-from .engine import (DecodeEngine, StallClock, make_decode_chunk,  # noqa: F401
-                     make_train_chunk)
+from .engine import (DecodeEngine, StallClock, init_session_state,  # noqa: F401
+                     make_decode_chunk, make_session_chunk,
+                     make_session_refill, make_train_chunk)
+from .scheduler import (QueueFull, Request, RequestHandle,  # noqa: F401
+                        SlotScheduler)
 from .train_loop import TrainLoop, TrainLoopConfig  # noqa: F401
-from .serve_loop import ServeLoop  # noqa: F401
+from .serve_loop import ServeLoop, ServeSession  # noqa: F401
 from .compile_cache import CompileCache  # noqa: F401

@@ -191,10 +191,23 @@ class DecodeEngine:
         self.chunk = chunk
         self.eos_id = eos_id
         self.donate = donate
-        self._chunk_fn = make_decode_chunk(decode_step, chunk,
-                                           eos_id=eos_id, donate=donate)
+        self._decode_step = decode_step
+        # scan programs keyed by scan length: the steady chunk is K; a tail
+        # chunk (max_new % K) compiles a short-scan variant once and reuses
+        # it, instead of running K iterations with every step masked off
+        self._chunk_fns: dict[int, Callable] = {
+            chunk: make_decode_chunk(decode_step, chunk, eos_id=eos_id,
+                                     donate=donate)}
         self.clock = StallClock()
         self.chunk_latencies: list[tuple[float, int]] = []
+
+    def _fn_for(self, k: int) -> Callable:
+        fn = self._chunk_fns.get(k)
+        if fn is None:
+            fn = make_decode_chunk(self._decode_step, k, eos_id=self.eos_id,
+                                   donate=self.donate)
+            self._chunk_fns[k] = fn
+        return fn
 
     def generate(self, params, cache, start_tok: np.ndarray, max_new: int,
                  start_pos: int = 0):
@@ -218,20 +231,177 @@ class DecodeEngine:
         w = 0
         while w < max_new:
             remaining = max_new - w
+            k = min(self.chunk, remaining)      # tail chunk: short scan
             t0 = self.clock.dispatch()
             (cache, tok, finished, emitted, pos, n, all_done,
-             toks) = self._chunk_fn(params, cache, tok, finished, emitted,
-                                    pos, jnp.asarray(remaining, jnp.int32))
+             toks) = self._fn_for(k)(params, cache, tok, finished, emitted,
+                                     pos, jnp.asarray(remaining, jnp.int32))
             self.clock.sync(n, all_done, toks)
             dt = time.perf_counter() - t0
             n = int(n)
             self.chunk_latencies.append((dt, n))
             out[:, 1 + w:1 + w + n] = np.asarray(toks)[:, :n]
             w += n
-            if n < min(self.chunk, remaining) or bool(all_done):
+            if n < k or bool(all_done):
                 break
         return (out[:, :1 + w], cache, np.asarray(finished),
                 np.asarray(emitted, np.int64))
+
+
+# ----------------------------------------------------------------------------
+# Scan-compiled slot-scheduled decode — the continuous-batching session cell
+# ----------------------------------------------------------------------------
+
+
+def init_session_state(cache, n_slots: int, max_prompt: int) -> dict:
+    """Fresh device state for a ServeSession's slot pool (all slots idle).
+
+    The state is one pytree so the whole pool is donated through every
+    chunk: steady-state serving re-uses the same device buffers no matter
+    how many requests cycle through the slots.
+    """
+    i32 = lambda *s: jnp.zeros(s, jnp.int32)
+    return {
+        "cache": cache,
+        "tok": i32(n_slots, 1),                # last sampled token per slot
+        "pos": i32(n_slots),                   # per-slot decode position
+        "consumed": i32(n_slots),              # prompt tokens consumed
+        "prompt_len": i32(n_slots),
+        "prompt_buf": i32(n_slots, max_prompt),
+        "budget": i32(n_slots),                # max_new per slot
+        "emitted": i32(n_slots),
+        "finished": jnp.zeros((n_slots,), bool),
+        "active": jnp.zeros((n_slots,), bool),
+        "age": i32(n_slots),                   # admissions seen by the slot
+    }
+
+
+def session_chunk_fn(decode_step: Callable, chunk: int,
+                     eos_id: int | None = None) -> Callable:
+    """The pure K-step session program (unjitted — see `make_session_chunk`).
+
+    Signature::
+
+        chunk_fn(params, state) -> (state, tokens, emit, busy, all_done)
+
+    `state` is the `init_session_state` pytree; every slot advances through
+    its own request: while `consumed < prompt_len` the step feeds the next
+    prompt token (prefill — outputs discarded until the step that consumes
+    the last prompt token, whose output is the request's first emitted
+    token), afterwards it feeds back its own sampled token. Slots are
+    *done* — frozen in place, position not advancing — once inactive,
+    finished (EOS), or out of budget (`emitted == budget`); `lax.cond`
+    skips the model body entirely when every slot is done. Each slot keeps
+    its own `pos`, so a freshly refilled slot restarts at position 0 while
+    its neighbours are mid-generation.
+
+    Returns per-chunk `tokens` (B, K) raw step outputs, `emit` (B, K) bool
+    (which of them are emitted tokens of the slot's request — step order),
+    `busy` (B,) how many of the K steps each slot was live for (occupancy
+    accounting), and `all_done` for the host's early exit.
+    """
+
+    def _done(s):
+        return (~s["active"]) | s["finished"] | (s["emitted"] >= s["budget"])
+
+    def chunk_fn(params, state):
+        p_max = state["prompt_buf"].shape[1]
+
+        def body(s, _):
+            done = _done(s)
+            fed_prompt = (~done) & (s["consumed"] < s["prompt_len"])
+            idx = jnp.clip(s["consumed"], 0, p_max - 1)
+            p_tok = jnp.take_along_axis(s["prompt_buf"], idx[:, None], axis=1)
+            in_tok = jnp.where(fed_prompt[:, None], p_tok, s["tok"])
+
+            def run(operand):
+                cache, tok = operand
+                return decode_step(params, cache,
+                                   {"tokens": tok, "pos": s["pos"]})
+
+            def skip(operand):
+                return operand
+
+            new_cache, raw = jax.lax.cond(jnp.any(~done), run, skip,
+                                          (s["cache"], in_tok))
+            consumed = s["consumed"] + fed_prompt
+            # the step that consumed the last prompt token emits the first
+            # token; pure-prefill outputs are discarded
+            emit = (~done) & (consumed >= s["prompt_len"])
+            finished = s["finished"]
+            if eos_id is not None:
+                finished = finished | (emit & (raw[:, 0] == eos_id))
+            s = dict(s, cache=new_cache,
+                     tok=jnp.where(done[:, None], s["tok"], raw),
+                     pos=s["pos"] + (~done), consumed=consumed,
+                     emitted=s["emitted"] + emit, finished=finished)
+            return s, (raw[:, 0], emit, ~done)
+
+        state, (toks, emit, live) = jax.lax.scan(
+            body, state, None, length=chunk)
+        return (state, jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emit, 0, 1),
+                jnp.sum(live, axis=0, dtype=jnp.int32),
+                jnp.all(_done(state)))
+
+    return chunk_fn
+
+
+def make_session_chunk(decode_step: Callable, chunk: int, *,
+                       eos_id: int | None = None,
+                       donate: bool = True) -> Callable:
+    """Jit `session_chunk_fn`, donating the whole slot-pool state pytree so
+    steady-state serving runs allocation-free. The donated state is invalid
+    after the call — the caller threads the returned state forward."""
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    fn = session_chunk_fn(decode_step, chunk, eos_id)
+    return jax.jit(fn, donate_argnums=(1,) if donate else ())
+
+
+def _default_cache_zero(cache, mask):
+    """Zero masked batch rows of a flat cache (batch axis 0 on every leaf).
+    Model caches with stacked layer axes pass `steps.zero_cache_slots`."""
+    def one(c):
+        shape = (mask.shape[0],) + (1,) * (c.ndim - 1)
+        return jnp.where(mask.reshape(shape), jnp.zeros((), c.dtype), c)
+    return jax.tree.map(one, cache)
+
+
+def make_session_refill(*, cache_zero: Callable | None = None,
+                        donate: bool = True) -> Callable:
+    """Compile the slot-refill program: `refill(state, admit, release,
+    prompt_buf, prompt_len, budget) -> state`.
+
+    `admit`/`release` are (B,) bool masks; admitted slots get their cache
+    rows zeroed (recurrent block states must not leak across requests),
+    position/counters reset, the new request's prompt row and budget
+    installed, and `age` bumped; released slots just go inactive. Rows of
+    the new-request arrays outside `admit` are ignored. The state is
+    donated, so refills recycle the pool's buffers in place — the DMA-refill
+    analogue of the paper's always-addressable L1 slots.
+    """
+    cache_zero = cache_zero or _default_cache_zero
+
+    def refill(state, admit, release, prompt_buf, prompt_len, budget):
+        zero = jnp.zeros_like(state["pos"])
+        pick = lambda new, old: jnp.where(admit, new, old)
+        return dict(
+            state,
+            cache=cache_zero(state["cache"], admit),
+            tok=jnp.where(admit[:, None], 0, state["tok"]),
+            pos=pick(zero, state["pos"]),
+            consumed=pick(zero, state["consumed"]),
+            emitted=pick(zero, state["emitted"]),
+            finished=jnp.where(admit, False, state["finished"]),
+            active=(state["active"] & ~release) | admit,
+            age=state["age"] + admit,
+            prompt_buf=jnp.where(admit[:, None], prompt_buf,
+                                 state["prompt_buf"]),
+            prompt_len=pick(prompt_len, state["prompt_len"]),
+            budget=pick(budget, state["budget"]),
+        )
+
+    return jax.jit(refill, donate_argnums=(0,) if donate else ())
 
 
 # ----------------------------------------------------------------------------

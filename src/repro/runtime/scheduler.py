@@ -1,0 +1,232 @@
+"""Request-level slot scheduler for the continuous-batching serve session.
+
+MemPool keeps hundreds of PEs under 2% stall because the shared-L1 banks
+are always addressable and the DMA engine refills them while compute
+proceeds. The serving analogue: a fixed pool of decode slots (the batch
+rows of the compiled session cell) that must never sit idle while work is
+queued. This module is the host-side half of that machinery — a bounded
+request queue plus a slot table with pluggable admission order; the
+device-side half (per-slot refill, masked stepping) lives in
+`runtime/engine.py`.
+
+Invariants the scheduler maintains (property-tested in
+tests/test_scheduler.py):
+
+* a slot is assigned to at most one running request at a time;
+* a request is admitted at most once, and only from the queue;
+* FIFO admission preserves submit order ("longest_prefix" reorders by
+  prompt length — longest first — with submit order as the tie-break);
+* cancelling a queued request removes it; cancelling a running request
+  marks it for harvest so the driver frees the slot at the next chunk
+  boundary;
+* `submit` applies backpressure: a bounded queue raises `QueueFull`
+  instead of growing without limit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Iterator
+
+import numpy as np
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+CANCELLED = "cancelled"
+
+ADMISSION_POLICIES = ("fifo", "longest_prefix")
+
+
+class QueueFull(RuntimeError):
+    """The session's bounded request queue is at capacity (backpressure)."""
+
+
+@dataclasses.dataclass
+class Request:
+    """One decode request moving through the slot pool."""
+
+    rid: int
+    prompt: np.ndarray                      # (P,) int32, P >= 1
+    max_new: int
+    submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
+    state: str = QUEUED
+    slot: int | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+    started_at: float | None = None
+    first_token_at: float | None = None
+    finished_at: float | None = None
+    hit_eos: bool = False
+
+    @property
+    def emitted(self) -> int:
+        return len(self.tokens)
+
+
+class RequestHandle:
+    """The caller's view of a submitted request (returned by `submit`)."""
+
+    def __init__(self, req: Request):
+        self._req = req
+
+    @property
+    def id(self) -> int:
+        return self._req.rid
+
+    @property
+    def state(self) -> str:
+        return self._req.state
+
+    @property
+    def done(self) -> bool:
+        return self._req.state in (DONE, CANCELLED)
+
+    @property
+    def cancelled(self) -> bool:
+        return self._req.state == CANCELLED
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """Tokens emitted so far (includes EOS when the request hit it)."""
+        return np.asarray(self._req.tokens, np.int32)
+
+    @property
+    def hit_eos(self) -> bool:
+        return self._req.hit_eos
+
+    def result(self) -> np.ndarray:
+        if not self.done:
+            raise RuntimeError(f"request {self.id} is still {self.state}; "
+                               f"drain() or poll() the session first")
+        return self.tokens
+
+    @property
+    def ttft_s(self) -> float | None:
+        r = self._req
+        if r.first_token_at is None:
+            return None
+        return r.first_token_at - r.submitted_at
+
+    @property
+    def latency_s(self) -> float | None:
+        r = self._req
+        if r.finished_at is None:
+            return None
+        return r.finished_at - r.submitted_at
+
+    def __repr__(self) -> str:
+        return (f"RequestHandle(id={self.id}, state={self.state}, "
+                f"emitted={self._req.emitted})")
+
+
+class SlotScheduler:
+    """Bounded request queue + slot table with pluggable admission order.
+
+    Pure host-side bookkeeping: it never touches device buffers, so the
+    policy is unit-testable independent of the compiled session cell.
+    """
+
+    def __init__(self, n_slots: int, *, max_queue: int | None = None,
+                 policy: str = "fifo"):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if policy not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             f"expected one of {ADMISSION_POLICIES}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.n_slots = n_slots
+        self.max_queue = max_queue
+        self.policy = policy
+        self._queue: deque[Request] = deque()
+        self._slots: list[Request | None] = [None] * n_slots
+        self._next_rid = 0
+        # rids in admission order — bounded: a session admits without limit
+        self.admitted_order: deque[int] = deque(maxlen=4096)
+        self.queue_peak = 0
+
+    # -- queue -----------------------------------------------------------
+    def submit(self, prompt, max_new: int) -> Request:
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            raise QueueFull(f"request queue is at capacity "
+                            f"({self.max_queue}); drain or poll first")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("prompt must hold at least one token")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new)
+        self._next_rid += 1
+        self._queue.append(req)
+        self.queue_peak = max(self.queue_peak, len(self._queue))
+        return req
+
+    def cancel(self, req: Request) -> bool:
+        """Queued -> removed now; running -> marked (the driver frees the
+        slot at the next chunk boundary). Returns False if already over."""
+        if req.state == QUEUED:
+            self._queue.remove(req)
+            req.state = CANCELLED
+            req.finished_at = time.perf_counter()
+            return True
+        if req.state == RUNNING:
+            req.state = CANCELLED
+            req.finished_at = time.perf_counter()
+            return True
+        return False
+
+    # -- slot table ------------------------------------------------------
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Assign queued requests to free slots per the admission policy.
+        Returns [(slot, request)] for this round, already marked RUNNING."""
+        free = self.free_slots()
+        if not free or not self._queue:
+            return []
+        if self.policy == "longest_prefix":
+            # longest prompt first: long prefills start earliest so their
+            # extra slot-steps overlap the short requests' turnover
+            order = sorted(self._queue,
+                           key=lambda r: (-r.prompt.size, r.rid))
+        else:
+            order = list(self._queue)
+        out = []
+        for slot, req in zip(free, order):
+            assert self._slots[slot] is None, "slot double-assignment"
+            assert req.state == QUEUED, "re-admission of a running request"
+            self._queue.remove(req)
+            self._slots[slot] = req
+            req.state = RUNNING
+            req.slot = slot
+            req.started_at = time.perf_counter()
+            self.admitted_order.append(req.rid)
+            out.append((slot, req))
+        return out
+
+    def release(self, slot: int) -> None:
+        req = self._slots[slot]
+        assert req is not None, f"release of a free slot {slot}"
+        self._slots[slot] = None
+        req.slot = None
+
+    # -- views -----------------------------------------------------------
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def running(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    def running_requests(self) -> Iterator[tuple[int, Request]]:
+        for i, r in enumerate(self._slots):
+            if r is not None:
+                yield i, r
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._queue) or self.running > 0

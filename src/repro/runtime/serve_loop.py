@@ -1,14 +1,54 @@
-"""Batched serving driver: continuous batched decode over a KV cache."""
+"""Serving drivers: batch programs (`ServeLoop`) and request-level
+continuous batching (`ServeSession`).
+
+`ServeLoop` is the fixed-batch driver: one rectangular batch of prompts
+runs to completion, so a slot that finishes early idles until the slowest
+request drains — the software analogue of MemPool's stalled-PE problem.
+
+`ServeSession` is the request-level driver: a fixed slot pool stepped by
+the scan-compiled session cell (runtime/engine.py), with a host-side
+`SlotScheduler` (runtime/scheduler.py) evicting finished slots and
+admitting queued requests between chunks. Steady-state decode stays
+allocation-free (the whole pool state is donated through every chunk and
+refill) and the host syncs once per K tokens.
+"""
 
 from __future__ import annotations
 
 import time
-from typing import Callable
+from collections import deque
+from typing import Callable, Iterator
 
 import jax.numpy as jnp
 import numpy as np
 
+HISTORY = 4096          # sliding-window length for session stats records
+
+
+def chunked_latency_stats(samples) -> dict:
+    """Per-token latency stats from `(seconds, steps)` chunk samples.
+
+    The first sample is dropped (it carries compilation); with zero
+    post-warmup samples the figures report 0.0 rather than fake
+    `1/epsilon` numbers. Shared by `ServeLoop.stats` (engine path) and
+    the session's legacy-shaped one-shot stats so the two cannot drift.
+    """
+    samples = list(samples)
+    lat = np.asarray([dt for dt, _ in samples[1:]], np.float64)
+    steps = np.asarray([n for _, n in samples[1:]], np.int64)
+    tokens = int(steps.sum())
+    if lat.size == 0 or tokens == 0:
+        return {"decode_steps": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                "tokens_per_s_per_slot": 0.0}
+    per_tok = lat / np.maximum(steps, 1)
+    return {"decode_steps": tokens,
+            "p50_ms": float(np.percentile(per_tok, 50) * 1e3),
+            "p99_ms": float(np.percentile(per_tok, 99) * 1e3),
+            "tokens_per_s_per_slot": float(tokens / max(lat.sum(), 1e-9))}
+
 from repro.runtime.engine import DecodeEngine, StallClock
+from repro.runtime.scheduler import (DONE, QUEUED, RUNNING, RequestHandle,
+                                     SlotScheduler)
 
 
 class ServeLoop:
@@ -118,18 +158,7 @@ class ServeLoop:
         """
         lat = np.asarray(self.latencies[1:], np.float64)
         if self._chunk_steps is not None:
-            steps = np.asarray(self._chunk_steps[1:], np.int64)
-            tokens = int(steps.sum())
-            if lat.size == 0 or tokens == 0:
-                st = {"decode_steps": 0, "p50_ms": 0.0, "p99_ms": 0.0,
-                      "tokens_per_s_per_slot": 0.0}
-            else:
-                per_tok = lat / np.maximum(steps, 1)
-                st = {"decode_steps": tokens,
-                      "p50_ms": float(np.percentile(per_tok, 50) * 1e3),
-                      "p99_ms": float(np.percentile(per_tok, 99) * 1e3),
-                      "tokens_per_s_per_slot": float(
-                          tokens / max(lat.sum(), 1e-9))}
+            st = chunked_latency_stats(zip(self.latencies, self._chunk_steps))
         elif lat.size == 0:
             st = {"decode_steps": 0, "p50_ms": 0.0, "p99_ms": 0.0,
                   "tokens_per_s_per_slot": 0.0}
@@ -145,3 +174,217 @@ class ServeLoop:
             if self.eos_id is not None:
                 st["finished_slots"] = int(self._finished.sum())
         return st
+
+
+# ----------------------------------------------------------------------------
+# Request-level serving: continuous batching over a slot pool
+# ----------------------------------------------------------------------------
+
+
+class ServeSession:
+    """A long-lived slot pool serving a stream of independent requests.
+
+    ::
+
+        sess = cluster.compile(ServeSessionProgram(slots=8)).open()
+        h = sess.submit(prompt, max_new=64)        # -> RequestHandle
+        for handle, toks, done in sess.stream():   # incremental tokens
+            ...
+        sess.drain()                               # run queue dry
+        h.result()                                 # (T,) np.int32
+
+    The device side is one scan-compiled chunk program (`chunk_fn`) that
+    advances every live slot K steps — per-slot prompt prefill, position
+    tracking, EOS/budget masking all on device — plus a refill program
+    (`refill_fn`) that recycles finished slots in place. The host wakes
+    once per chunk: harvest emitted tokens, free finished slots, admit
+    queued requests, dispatch the next chunk. Both programs donate the
+    pool state, so steady-state serving allocates nothing.
+    """
+
+    def __init__(self, chunk_fn: Callable, refill_fn: Callable, params,
+                 state: dict, *, n_slots: int, chunk: int,
+                 max_prompt: int, max_seq: int | None = None,
+                 eos_id: int | None = None, max_queue: int | None = None,
+                 admission: str = "fifo"):
+        self._chunk_fn = chunk_fn
+        self._refill_fn = refill_fn
+        self.params = params
+        self.state = state
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.max_prompt = max_prompt
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.scheduler = SlotScheduler(n_slots, max_queue=max_queue,
+                                       policy=admission)
+        self.clock = StallClock()
+        # bounded histories: a session lives for an open-ended request
+        # stream, so per-chunk and per-request records keep a sliding
+        # window (percentiles cover the recent window; totals are counters)
+        self.chunk_latencies: deque[tuple[float, int]] = deque(
+            maxlen=HISTORY)
+        self.handles: dict[int, RequestHandle] = {}    # in-flight only
+        self._pending_release: set[int] = set()
+        self._busy_steps = 0
+        self._total_steps = 0
+        self._emitted_total = 0
+        self._per_chunk_emitted: deque[int] = deque(maxlen=HISTORY)
+        self._ttfts: deque[float] = deque(maxlen=HISTORY)
+        self._latencies: deque[float] = deque(maxlen=HISTORY)
+        self._n_done = 0
+        self._n_cancelled = 0
+
+    # -- request lifecycle ----------------------------------------------
+    def submit(self, prompt, max_new: int) -> RequestHandle:
+        """Enqueue one request; admitted to a slot at a chunk boundary.
+        Raises `scheduler.QueueFull` when the bounded queue is at capacity.
+        """
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size > self.max_prompt:
+            raise ValueError(f"prompt of {prompt.size} tokens exceeds the "
+                             f"session's max_prompt={self.max_prompt}")
+        # the request's last KV write lands at position P + max_new - 2
+        # (the step consuming prompt token P emits token #1), so it fits
+        # iff P + max_new - 1 <= max_seq — exactly the old ServeProgram
+        # bound of P + N <= max_seq once run(prompt)'s +1 budget is counted
+        if (self.max_seq is not None
+                and prompt.size + max_new - 1 > self.max_seq):
+            raise ValueError(f"prompt ({prompt.size}) + max_new ({max_new}) "
+                             f"exceeds the session's max_seq={self.max_seq}")
+        req = self.scheduler.submit(prompt, max_new)
+        handle = RequestHandle(req)
+        self.handles[req.rid] = handle
+        return handle
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Cancel a request. Queued: removed now. Running: its slot is
+        freed (and refillable) at the next chunk boundary."""
+        was_queued = handle._req.state == QUEUED
+        ok = self.scheduler.cancel(handle._req)
+        if ok:
+            self._n_cancelled += 1
+            if was_queued:                  # terminal now; running requests
+                self.handles.pop(handle.id, None)   # retire at the boundary
+        return ok
+
+    # -- the chunk boundary ---------------------------------------------
+    def _admit_and_refill(self) -> None:
+        release = np.zeros(self.n_slots, bool)
+        for slot, req in list(self.scheduler.running_requests()):
+            if req.state != RUNNING:            # cancelled mid-flight
+                self._pending_release.add(slot)
+                self.handles.pop(req.rid, None)     # retired
+        for slot in self._pending_release:
+            self.scheduler.release(slot)
+            release[slot] = True
+        self._pending_release.clear()
+        admits = self.scheduler.admit()
+        if not admits and not release.any():
+            return
+        admit = np.zeros(self.n_slots, bool)
+        pbuf = np.zeros((self.n_slots, self.max_prompt), np.int32)
+        plen = np.zeros(self.n_slots, np.int32)
+        budget = np.zeros(self.n_slots, np.int32)
+        for slot, req in admits:
+            admit[slot] = True
+            pbuf[slot, :req.prompt.size] = req.prompt
+            plen[slot] = req.prompt.size
+            budget[slot] = req.max_new
+        self.state = self._refill_fn(self.state, admit, release, pbuf,
+                                     plen, budget)
+
+    def poll(self) -> list[tuple[RequestHandle, np.ndarray, bool]]:
+        """Advance the session by one chunk. Returns the chunk's events:
+        `(handle, new_tokens, done)` per request that emitted or finished.
+        A no-op (empty list) when no request is queued or running."""
+        self._admit_and_refill()
+        if self.scheduler.running == 0:
+            return []
+        t0 = self.clock.dispatch()
+        self.state, toks, emit, busy, _all_done = self._chunk_fn(
+            self.params, self.state)
+        self.clock.sync(toks, emit, busy)
+        dt = time.perf_counter() - t0
+        toks, emit, busy = (np.asarray(toks), np.asarray(emit),
+                            np.asarray(busy))
+        now = time.perf_counter()
+        self.chunk_latencies.append((dt, int(busy.max(initial=0))))
+        self._total_steps += self.chunk
+        self._busy_steps += int(busy.sum())
+        events = []
+        n_emitted = 0
+        for slot, req in list(self.scheduler.running_requests()):
+            new = toks[slot][emit[slot]]
+            if new.size:
+                if req.first_token_at is None:
+                    req.first_token_at = now
+                    self._ttfts.append(now - req.submitted_at)
+                req.tokens.extend(int(t) for t in new)
+                n_emitted += new.size
+                if self.eos_id is not None and np.any(new == self.eos_id):
+                    req.hit_eos = True
+            done = req.hit_eos or req.emitted >= req.max_new
+            if done:
+                req.state = DONE
+                req.finished_at = now
+                self._pending_release.add(slot)
+                self._n_done += 1
+                self._latencies.append(now - req.submitted_at)
+            if new.size or done:
+                handle = self.handles.pop(req.rid) if done \
+                    else self.handles[req.rid]      # retire done requests
+                events.append((handle, new, done))
+        self._emitted_total += n_emitted
+        self._per_chunk_emitted.append(n_emitted)
+        return events
+
+    def stream(self) -> Iterator[tuple[RequestHandle, np.ndarray, bool]]:
+        """Yield `(handle, new_tokens, done)` events until the queue and
+        every slot run dry. Submitting more work mid-stream extends it."""
+        while self.scheduler.busy:
+            yield from self.poll()
+
+    def drain(self) -> dict:
+        """Run until every submitted request completes; returns stats()."""
+        for _ in self.stream():
+            pass
+        return self.stats()
+
+    # -- stats -----------------------------------------------------------
+    def stats(self) -> dict:
+        """Session-level serving stats.
+
+        `occupancy_pct` is live-slot-steps over total slot-steps — the
+        slot-pool analogue of the paper's PE-utilization figure; `ttft_ms`
+        and `latency_ms` are per-request percentiles (chunk-granular, over
+        the last `HISTORY` requests); `tokens_per_s` counts emitted tokens
+        across all slots over the post-warmup chunk walls (same window);
+        `stall` is the StallClock ledger. Counters (`requests_done`,
+        `emitted_total`, ...) cover the whole session lifetime.
+        """
+        rows = list(self.chunk_latencies)
+        lat = np.asarray([dt for dt, _ in rows[1:]], np.float64)
+        emitted = np.asarray(list(self._per_chunk_emitted)[1:], np.int64)
+        tok_s = (float(emitted.sum() / max(lat.sum(), 1e-9))
+                 if lat.size else 0.0)
+        pct = lambda xs, q: (float(np.percentile(np.asarray(xs), q))
+                             if len(xs) else 0.0)
+        ttfts, lats = list(self._ttfts), list(self._latencies)
+        total = self.n_slots * self._total_steps
+        return {
+            "requests_done": self._n_done,
+            "requests_cancelled": self._n_cancelled,
+            "emitted_total": self._emitted_total,
+            "tokens_per_s": tok_s,
+            "occupancy_pct": 100.0 * self._busy_steps / max(total, 1),
+            "ttft_ms": {"p50": pct(ttfts, 50) * 1e3,
+                        "p99": pct(ttfts, 99) * 1e3},
+            "latency_ms": {"p50": pct(lats, 50) * 1e3,
+                           "p99": pct(lats, 99) * 1e3},
+            "queue_peak": self.scheduler.queue_peak,
+            "admitted_order": list(self.scheduler.admitted_order),
+            "slots": self.n_slots,
+            "chunk": self.chunk,
+            "stall": self.clock.report(),
+        }

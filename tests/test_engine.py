@@ -97,6 +97,32 @@ def test_decode_chunk_rejects_bad_k():
         DecodeEngine(scripted_step(SCRIPT), 0)
 
 
+def test_tail_chunk_compiles_short_scan_variant():
+    """max_new % chunk != 0: the final chunk runs a short scan (exactly the
+    remaining steps) instead of K iterations with every slot masked off."""
+    script = np.tile(np.arange(24, dtype=np.int32)[:, None], (1, 2))
+    eng = DecodeEngine(scripted_step(script), 16, eos_id=None)
+    out, _, _, emitted = eng.generate(None, fresh_cache(2),
+                                      np.zeros((2, 1), np.int32), max_new=20)
+    assert out.shape == (2, 21)
+    assert sorted(eng._chunk_fns) == [4, 16]        # steady + tail variant
+    assert [n for _, n in eng.chunk_latencies] == [16, 4]
+    # parity with the per-token loop
+    ref, _ = run_loop(1, eos_id=None, max_new=20, script=script)
+    np.testing.assert_array_equal(out, ref)
+    # the tail variant is cached: a second generate re-uses both programs
+    eng.generate(None, fresh_cache(2), np.zeros((2, 1), np.int32),
+                 max_new=20)
+    assert sorted(eng._chunk_fns) == [4, 16]
+
+
+def test_tail_chunk_shorter_than_one_chunk():
+    out, st = run_loop(16, eos_id=None, max_new=3)  # K > max_new: one short scan
+    ref, _ = run_loop(1, eos_id=None, max_new=3)
+    np.testing.assert_array_equal(out, ref)
+    assert st["stall"]["host_syncs"] == 1
+
+
 # ----------------------------------------------------------------------------
 # Donation: steady-state decode chunks allocate nothing new
 # ----------------------------------------------------------------------------

@@ -1,0 +1,280 @@
+"""Request-level serving: ServeSession + the slot-scheduled session cell.
+
+Acceptance coverage: a ServeSession fed one batch up-front is bit-identical
+to the fixed-batch `ServeProgram(chunk=K)` path (tokens, EOS behaviour,
+`emitted_per_slot`); staggered requests decoding at independent per-slot
+positions match what each request gets in isolation; finished slots are
+recycled in place (allocation-free steady state, on-device `age`/`active`
+masks); streaming delivers incremental tokens; cancel frees the slot;
+submit applies bounded-queue backpressure.
+"""
+
+import gc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import Cluster, ServeProgram, ServeSessionProgram
+from repro.runtime import engine
+from repro.runtime.scheduler import QueueFull
+from repro.runtime.serve_loop import ServeLoop, ServeSession
+
+
+# ----------------------------------------------------------------------------
+# Scripted harness: a decode step aware of per-slot positions
+# ----------------------------------------------------------------------------
+
+
+SCRIPT = np.array([[7, 1, 2], [3, 7, 4], [5, 6, 8], [9, 9, 9],
+                   [2, 3, 4], [5, 6, 7]], np.int32)
+
+
+def scripted_step(script: np.ndarray):
+    """Emits script[pos[i], i] per slot — `pos` scalar or (B,) vector."""
+    table = jnp.asarray(script, jnp.int32)
+
+    def decode_step(params, cache, batch):
+        pos = jnp.asarray(batch["pos"])
+        idx = jnp.clip(pos, 0, table.shape[0] - 1)
+        if pos.ndim == 0:
+            return cache, jnp.take(table, idx, axis=0)[:, None]
+        rows = jnp.take(table, idx, axis=0)              # (B, B)
+        return cache, jnp.diagonal(rows)[:, None]
+
+    return decode_step
+
+
+def make_session(script=SCRIPT, *, chunk=2, eos_id=7, max_prompt=4,
+                 max_queue=None, admission="fifo"):
+    B = script.shape[1]
+    chunk_fn = engine.make_session_chunk(scripted_step(script), chunk,
+                                         eos_id=eos_id)
+    refill_fn = engine.make_session_refill()
+    state = engine.init_session_state({"kv": jnp.zeros((B, 4), jnp.float32)},
+                                      B, max_prompt)
+    return ServeSession(chunk_fn, refill_fn, None, state, n_slots=B,
+                        chunk=chunk, max_prompt=max_prompt, eos_id=eos_id,
+                        max_queue=max_queue, admission=admission)
+
+
+# ----------------------------------------------------------------------------
+# Parity with the fixed-batch loop (scripted)
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 3, 16])
+def test_session_matches_serve_loop_bit_for_bit(chunk):
+    B = SCRIPT.shape[1]
+    loop = ServeLoop(scripted_step(SCRIPT), None,
+                     {"kv": jnp.zeros((B, 4), jnp.float32)},
+                     batch_size=B, eos_id=7, chunk=1)
+    ref = loop.generate(np.zeros((B, 1), np.int32), max_new=4)
+    ref_st = loop.stats()
+
+    sess = make_session(chunk=chunk)
+    handles = [sess.submit([0], 4) for _ in range(B)]
+    sess.drain()
+    # per-request tokens are the unpadded rows of the legacy output
+    for i, h in enumerate(handles):
+        n = ref_st["emitted_per_slot"][i]
+        np.testing.assert_array_equal(h.tokens, ref[i, 1:1 + n])
+    assert [h.tokens.size for h in handles] == ref_st["emitted_per_slot"]
+    assert sum(h.hit_eos for h in handles) == ref_st["finished_slots"]
+    # host syncs once per chunk, not per token
+    assert sess.clock.report()["host_syncs"] <= -(-4 // chunk) + 1
+
+
+def test_session_slot_recycling_and_age():
+    sess = make_session(chunk=2)
+    first = [sess.submit([0], 4) for _ in range(3)]
+    sess.drain()
+    # all three slots saw one admission
+    np.testing.assert_array_equal(np.asarray(sess.state["age"]), [1, 1, 1])
+    late = sess.submit([1, 2], 3)             # prefill 1 then 2, emit 3
+    sess.drain()
+    assert late.done and not late.hit_eos
+    # exactly one slot was recycled (age bumped), in place
+    assert sorted(np.asarray(sess.state["age"]).tolist()) == [1, 1, 2]
+    assert late.tokens.size == 3
+    assert all(h.done for h in first)
+
+
+def test_session_steady_state_allocates_nothing():
+    sess = make_session(chunk=2, eos_id=None)
+    sess.submit([0], 4)
+    sess.drain()                              # compile + first cycle
+    gc.collect()
+    baseline = len(jax.live_arrays())
+    for _ in range(3):                        # recycle the pool repeatedly
+        sess.submit([0], 4)
+        sess.drain()
+        gc.collect()
+        assert len(jax.live_arrays()) == baseline
+
+
+# ----------------------------------------------------------------------------
+# Streaming, cancel, backpressure, validation
+# ----------------------------------------------------------------------------
+
+
+def test_stream_yields_incremental_tokens_in_order():
+    sess = make_session(chunk=2, eos_id=None)
+    h = sess.submit([0], 4)
+    seen = []
+    dones = 0
+    for handle, toks, done in sess.stream():
+        assert handle is h
+        seen.extend(toks.tolist())
+        dones += done
+    assert dones == 1
+    np.testing.assert_array_equal(seen, h.result())
+    assert h.tokens.size == 4
+
+
+def test_poll_is_noop_when_idle():
+    sess = make_session()
+    assert sess.poll() == []
+    assert sess.clock.report()["host_syncs"] == 0
+
+
+def test_cancel_running_frees_slot_for_queued_work():
+    script = np.full((8, 1), 3, np.int32)     # B=1: queue forms behind slot 0
+    sess = make_session(script, chunk=2, eos_id=None)
+    a = sess.submit([0], 8)
+    b = sess.submit([0], 2)
+    sess.poll()                               # a admitted + 2 tokens
+    assert a.tokens.size == 2 and b.state == "queued"
+    assert sess.cancel(a)
+    sess.drain()
+    assert a.cancelled and a.tokens.size == 2     # truncated, kept
+    assert b.done and b.tokens.size == 2          # got the freed slot
+    assert a.result().size == 2                   # cancelled result() is fine
+
+
+def test_cancel_queued_never_runs():
+    script = np.full((8, 1), 3, np.int32)
+    sess = make_session(script, chunk=2, eos_id=None)
+    a = sess.submit([0], 4)
+    b = sess.submit([0], 4)
+    sess.cancel(b)
+    sess.drain()
+    assert b.cancelled and b.tokens.size == 0
+    assert a.done and a.tokens.size == 4
+
+
+def test_submit_backpressure_and_validation():
+    sess = make_session(max_queue=2)
+    sess.submit([0], 1)
+    sess.submit([0], 1)
+    with pytest.raises(QueueFull):
+        sess.submit([0], 1)
+    with pytest.raises(ValueError):
+        sess.submit([1] * 99, 1)              # prompt > max_prompt
+    sess2 = make_session()
+    sess2.max_seq = 4
+    with pytest.raises(ValueError):
+        sess2.submit([1, 2], 4)               # P + max_new > max_seq
+
+
+def test_longest_prefix_admission_orders_by_prompt():
+    script = np.full((8, 1), 3, np.int32)
+    sess = make_session(script, chunk=2, eos_id=None,
+                        admission="longest_prefix")
+    a = sess.submit([1], 2)
+    b = sess.submit([1, 2, 3], 2)
+    sess.drain()
+    assert list(sess.scheduler.admitted_order) == [b.id, a.id]
+
+
+def test_session_stats_shape():
+    sess = make_session(chunk=2, eos_id=None)
+    hs = [sess.submit([0], 3) for _ in range(4)]
+    st = sess.drain()
+    assert st["requests_done"] == 4
+    assert st["emitted_total"] == sum(h.tokens.size for h in hs) == 12
+    assert 0.0 < st["occupancy_pct"] <= 100.0
+    assert st["ttft_ms"]["p50"] >= 0.0
+    assert st["latency_ms"]["p99"] >= st["latency_ms"]["p50"] >= 0.0
+    assert st["stall"]["host_syncs"] == len(sess.chunk_latencies)
+
+
+# ----------------------------------------------------------------------------
+# Model path (slow): one-shot parity + staggered isolation
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_one_shot_session_bit_identical_to_serve_program():
+    cluster = Cluster("xlstm-125m-smoke")
+    ref = cluster.compile(ServeProgram(batch=2, max_seq=16, max_new=8,
+                                       chunk=4))
+    params = ref.init_params()
+    r_ref = ref.run(params=params)
+    r_sess = cluster.compile(ServeSessionProgram(
+        slots=2, max_seq=16, max_new=8, chunk=4)).run(params=params)
+    np.testing.assert_array_equal(r_ref["tokens"], r_sess["tokens"])
+    assert (r_ref["stats"]["emitted_per_slot"]
+            == r_sess["stats"]["emitted_per_slot"])
+
+    # EOS variant: masking, early stop, finished_slots all line up
+    eos = int(r_ref["tokens"][0, 4])
+    re = cluster.compile(ServeProgram(batch=2, max_seq=16, max_new=8,
+                                      chunk=4, eos_id=eos)).run(params=params)
+    rs = cluster.compile(ServeSessionProgram(
+        slots=2, max_seq=16, max_new=8, chunk=4,
+        eos_id=eos)).run(params=params)
+    np.testing.assert_array_equal(re["tokens"], rs["tokens"])
+    assert re["stats"]["emitted_per_slot"] == rs["stats"]["emitted_per_slot"]
+    assert re["stats"]["finished_slots"] == rs["stats"]["finished_slots"]
+
+    # prompt ingest parity (continuous-batching-style prefill per slot)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(0), (2, 3), 0,
+                                           cluster.arch.vocab))
+    rp = ref.run(params=params, prompt=prompt)
+    rps = cluster.compile(ServeSessionProgram(
+        slots=2, max_seq=16, max_new=8, chunk=4)).run(params=params,
+                                                      prompt=prompt)
+    np.testing.assert_array_equal(rp["tokens"], rps["tokens"])
+
+
+@pytest.mark.slow
+def test_staggered_requests_match_isolated_decode():
+    """Slots at independent positions (the continuous-batching invariant):
+    a request admitted into a recycled slot mid-session decodes the same
+    tokens it would get alone in a fresh pool."""
+    cluster = Cluster("qwen3-14b-smoke")      # attention arch: per-slot KV pos
+    prog = cluster.compile(ServeSessionProgram(slots=2, max_seq=32,
+                                               max_prompt=8, chunk=4))
+    params = prog.init_params()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cluster.arch.vocab, size=n).astype(np.int32)
+               for n in (3, 5, 2, 4)]
+    lens = [6, 9, 5, 7]
+
+    isolated = []
+    for p, n in zip(prompts, lens):
+        s = prog.open(params=params)
+        h = s.submit(p, n)
+        s.drain()
+        isolated.append(h.tokens.tolist())
+
+    sess = prog.open(params=params)
+    hs = [sess.submit(p, n) for p, n in zip(prompts, lens)]
+    st = sess.drain()
+    assert [h.tokens.tolist() for h in hs] == isolated
+    assert st["requests_done"] == 4
+    # four requests through two slots: both slots recycled at least once
+    assert np.asarray(sess.state["age"]).sum() == 4
+
+
+@pytest.mark.slow
+def test_api_serve_routes_through_session():
+    from repro import api
+    out = api.serve("xlstm-125m", batch=2, max_seq=16, max_new=4)
+    assert out["tokens"].shape == (2, 5)
+    st = out["stats"]
+    assert st["decode_steps"] == 3            # legacy per-token warmup drop
+    assert st["emitted_per_slot"] == [4, 4]
+    assert "session" in st and st["session"]["requests_done"] == 2
