@@ -14,8 +14,6 @@ defaults, with both measured wall time and modeled seconds.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,12 +23,10 @@ from repro.kernels import fused, ops, pipeline as pp
 
 
 def timeit(fn, *args, reps: int = 3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps
+    """Median wall seconds per call — the same warmup + median-of-repeats
+    loop the autotuner races candidates with (kernels/pipeline.median_time),
+    so bench rows and tune records are comparable numbers."""
+    return pp.median_time(lambda: fn(*args), reps=reps, warmup=1)
 
 
 def rows(smoke: bool = False) -> list[dict]:
@@ -128,24 +124,35 @@ def tuned_rows(smoke: bool = False) -> list[dict]:
     out = []
     for name, operands in _tune_operands(smoke).items():
         shapes = ops.kernel_shapes(name, *operands)
-        result = pp.autotune(name, shapes)
-        wrapper = ops.wrapper_for(name)
-        t_def = timeit(lambda: wrapper(*operands, **result.default_blocks),
-                       reps=reps)
-        # tuned timing goes through the policy dispatch (tuned_call), so the
-        # registry hit shows up in the active KernelPolicy's counters and
-        # the emitted rows are attributable to the policy that ran them
-        t_tuned = timeit(lambda: ops.tuned_call(name, *operands), reps=reps)
+        # registry-first: a warm TuneDB (or an earlier row this process)
+        # satisfies this without re-racing — a second benchmark run against
+        # the same DB performs zero candidate races
+        rec = pp.tuned_record(name, shapes)
+        if rec.timed:
+            # both lanes were timed in the race itself, by the same timer,
+            # so tuned <= default holds by construction
+            us_tuned, us_default = rec.measured_us, rec.default_us
+        else:
+            # modeled/frozen pick (or db record from an untimed run): time
+            # both lanes here through the wrappers
+            wrapper = ops.wrapper_for(name)
+            us_default = timeit(
+                lambda: wrapper(*operands, **dict(rec.default_blocks)),
+                reps=reps) * 1e6
+            us_tuned = timeit(lambda: ops.tuned_call(name, *operands),
+                              reps=reps) * 1e6
+        cost = pp.score(pp.KERNELS[name].traffic(shapes, dict(rec.blocks), 4))
         out.append({
             "name": f"table1_tuned/{name}",
-            "blocks": dict(result.blocks),
-            "default_blocks": dict(result.default_blocks),
-            "us_default": t_def * 1e6,
-            "us_tuned": t_tuned * 1e6,
-            "modeled_default_s": result.default_cost.total_s,
-            "modeled_tuned_s": result.cost.total_s,
-            "modeled_speedup": result.modeled_speedup,
-            "p_local": result.cost.p_local,
+            "blocks": dict(rec.blocks),
+            "default_blocks": dict(rec.default_blocks),
+            "us_default": us_default,
+            "us_tuned": us_tuned,
+            "modeled_default_s": rec.default_modeled_seconds,
+            "modeled_tuned_s": rec.modeled_seconds,
+            "measured_speedup": rec.measured_speedup,
+            "source": rec.source,
+            "p_local": cost.p_local,
         })
     return out
 
@@ -222,8 +229,8 @@ def main(smoke: bool = False) -> list[str]:
         lines.append(
             f"{r['name']},{r['us_tuned']:.1f},"
             f"default_us={r['us_default']:.1f};blocks={blocks};"
-            f"modeled_speedup={r['modeled_speedup']:.2f};"
-            f"p_local={r['p_local']:.3f}")
+            f"measured_speedup={r['measured_speedup']:.2f};"
+            f"source={r['source']};p_local={r['p_local']:.3f}")
     for r in fused_rows(smoke):
         lines.append(
             f"{r['name']},{r['us_fused']:.1f},"

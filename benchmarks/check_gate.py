@@ -1,0 +1,165 @@
+"""CI perf gate — exit-code checks over a BENCH_table1.json record.
+
+Replaces the old grep-a-summary-line CI steps with structured checks, and
+enforces the autotuner's contract: a *timed* tune is never slower than the
+hand-picked default it raced (MemPool's "measured, not modeled" discipline
+— the default is a race lane, so losing to it means the tuner regressed).
+
+Checks (each prints one `gate ok:`/`gate FAIL:` line; any FAIL exits 1):
+
+  tuned   every `table1_tuned/*` row satisfies
+          us_per_call <= default_us * (1 + --tol)
+  require comma-separated section presence: `tuned` (>=1 tuned row),
+          `fused` (>=1 `table1_fused/*` row with both timings),
+          `decode` (K1 + K16 rows, positive tok/s),
+          `serve`  (continuous + static rows, positive tok/s)
+  baseline (optional, vs a committed copy of BENCH_table1.json):
+          decode K16 stall_pct must not rise more than --stall-tol
+          percentage points; serve continuous occupancy_pct must not drop
+          more than --occ-tol percentage points.
+
+Usage (the CI perf-gate job):
+
+    python benchmarks/run.py --smoke --json /tmp/bench.json   # refreshes
+    python benchmarks/check_gate.py --bench BENCH_table1.json \
+        --baseline /tmp/baseline_table1.json --require tuned,fused,decode,serve
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REQUIREMENTS = ("tuned", "fused", "decode", "serve")
+
+
+def _derived(row: dict) -> dict[str, str]:
+    d = row.get("derived", "")
+    return dict(p.split("=", 1) for p in d.split(";") if "=" in p)
+
+
+def _rows(record: dict, prefix: str) -> list[dict]:
+    return [r for r in record.get("rows", [])
+            if r["name"].startswith(prefix)]
+
+
+def _by_name(rows: list[dict]) -> dict[str, dict]:
+    return {r["name"]: r for r in rows}
+
+
+class Gate:
+    def __init__(self):
+        self.failures: list[str] = []
+
+    def check(self, ok: bool, label: str, detail: str) -> None:
+        if ok:
+            print(f"gate ok: {label}: {detail}")
+        else:
+            print(f"gate FAIL: {label}: {detail}")
+            self.failures.append(f"{label}: {detail}")
+
+
+def check_tuned(gate: Gate, record: dict, tol: float) -> None:
+    rows = _rows(record, "table1_tuned/")
+    for r in rows:
+        kv = _derived(r)
+        if "default_us" not in kv:
+            gate.check(False, "tuned", f"{r['name']} has no default_us field")
+            continue
+        tuned_us = float(r["us_per_call"])
+        default_us = float(kv["default_us"])
+        ok = tuned_us <= default_us * (1.0 + tol)
+        gate.check(ok, "tuned",
+                   f"{r['name']} tuned {tuned_us:.1f}us vs default "
+                   f"{default_us:.1f}us (tol {tol:.0%}, "
+                   f"source={kv.get('source', '?')})")
+
+
+def check_require(gate: Gate, record: dict, require: list[str]) -> None:
+    if "tuned" in require:
+        n = len(_rows(record, "table1_tuned/"))
+        gate.check(n > 0, "require", f"{n} table1_tuned rows")
+    if "fused" in require:
+        rows = _rows(record, "table1_fused/")
+        ok = bool(rows) and all(
+            float(r["us_per_call"]) > 0
+            and float(_derived(r).get("unfused_us", 0)) > 0 for r in rows)
+        gate.check(ok, "require",
+                   f"{len(rows)} table1_fused rows with both timings")
+    if "decode" in require:
+        by = _by_name(record.get("decode", []))
+        ok = {"decode/K1", "decode/K16"} <= set(by) and all(
+            float(_derived(r).get("tokens_per_s", 0)) > 0
+            for r in by.values())
+        gate.check(ok, "require",
+                   f"decode rows {sorted(by)} with positive tok/s")
+    if "serve" in require:
+        by = _by_name(record.get("serve_continuous", []))
+        ok = {"serve/continuous", "serve/static"} <= set(by) and all(
+            float(_derived(r).get("tokens_per_s", 0)) > 0
+            for r in by.values())
+        gate.check(ok, "require",
+                   f"serve rows {sorted(by)} with positive tok/s")
+
+
+def check_baseline(gate: Gate, record: dict, baseline: dict,
+                   stall_tol: float, occ_tol: float) -> None:
+    new_dec = _by_name(record.get("decode", []))
+    old_dec = _by_name(baseline.get("decode", []))
+    if "decode/K16" in new_dec and "decode/K16" in old_dec:
+        new_stall = float(_derived(new_dec["decode/K16"])["stall_pct"])
+        old_stall = float(_derived(old_dec["decode/K16"])["stall_pct"])
+        gate.check(new_stall <= old_stall + stall_tol, "baseline",
+                   f"K16 stall {new_stall:.1f}% vs baseline "
+                   f"{old_stall:.1f}% (+{stall_tol:.1f}pt tol)")
+    new_srv = _by_name(record.get("serve_continuous", []))
+    old_srv = _by_name(baseline.get("serve_continuous", []))
+    if "serve/continuous" in new_srv and "serve/continuous" in old_srv:
+        new_occ = float(_derived(new_srv["serve/continuous"])["occupancy_pct"])
+        old_occ = float(_derived(old_srv["serve/continuous"])["occupancy_pct"])
+        gate.check(new_occ >= old_occ - occ_tol, "baseline",
+                   f"serve occupancy {new_occ:.1f}% vs baseline "
+                   f"{old_occ:.1f}% (-{occ_tol:.1f}pt tol)")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", required=True,
+                    help="fresh BENCH_table1.json to gate on")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_table1.json to diff against")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="tuned-vs-default timer-noise tolerance (fraction)")
+    ap.add_argument("--stall-tol", type=float, default=2.0,
+                    help="decode stall_pct regression tolerance (abs points)")
+    ap.add_argument("--occ-tol", type=float, default=10.0,
+                    help="serve occupancy regression tolerance (abs points)")
+    ap.add_argument("--require", default="tuned",
+                    help=f"comma-separated presence checks {REQUIREMENTS}")
+    args = ap.parse_args(argv)
+
+    record = json.loads(Path(args.bench).read_text())
+    require = [r for r in args.require.split(",") if r]
+    unknown = set(require) - set(REQUIREMENTS)
+    if unknown:
+        ap.error(f"unknown --require item(s) {sorted(unknown)}; "
+                 f"available: {REQUIREMENTS}")
+
+    gate = Gate()
+    check_tuned(gate, record, args.tol)
+    check_require(gate, record, require)
+    if args.baseline:
+        baseline = json.loads(Path(args.baseline).read_text())
+        check_baseline(gate, record, baseline, args.stall_tol, args.occ_tol)
+
+    if gate.failures:
+        print(f"perf gate: {len(gate.failures)} FAILURE(S)", file=sys.stderr)
+        return 1
+    print("perf gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,6 +19,11 @@ Flags:
   --repeat N    run each section N times and report the per-row median
                 us_per_call (derived fields from the first run)
   --policy MODE kernel policy mode the sweep runs under (default "tuned")
+  --tune-db P   persistent TuneDB path: timed tune races warm-start from it
+                and write back to it (default: the REPRO_TUNE_DB env var;
+                unset means no persistence). A warm DB makes the second
+                run race-free — the `# tune:` summary line shows
+                hits/misses/races/warm-start counts either way.
 
 Whenever the table1 section runs, its rows are also persisted to
 `BENCH_table1.json` at the repo root — the perf-trajectory record the CI
@@ -136,6 +141,8 @@ def _persist_table1(results: dict, repeat: int) -> Path | None:
     record = {"smoke": results["smoke"], "timestamp": results["timestamp"],
               "repeat": repeat, "policy": results["policy"],
               "rows": section["rows"]}
+    if "tuning" in results:
+        record["tuning"] = results["tuning"]
     decode = _decode_rows(results)
     if decode:
         # the K=1 vs K=16 engine trajectory rides with the kernel table
@@ -169,6 +176,8 @@ def main(argv: list[str] | None = None) -> None:
                     help="median-of-N timing: run each section N times")
     ap.add_argument("--policy", default="tuned", choices=MODES,
                     help="kernel policy mode the sweep runs under")
+    ap.add_argument("--tune-db", default=None,
+                    help="TuneDB path (default: REPRO_TUNE_DB env)")
     args = ap.parse_args(argv)
     if args.repeat < 1:
         ap.error("--repeat must be >= 1")
@@ -180,12 +189,28 @@ def main(argv: list[str] | None = None) -> None:
             ap.error(f"unknown section(s) {sorted(unknown)}; "
                      f"available: {[n for n, _ in MODULES]}")
 
-    cluster = Cluster(policy=args.policy)           # kernel-only cluster
+    # kernel-only cluster; a tune DB (flag or env) warm-starts KERNEL_TUNES
+    cluster = Cluster(policy=args.policy, tune_db=args.tune_db)
     program = cluster.compile(BenchProgram(sections=only, smoke=args.smoke,
                                            repeat=args.repeat))
     print("name,us_per_call,derived")
     results = program.run(MODULES)
     results["timestamp"] = time.time()
+    stats = cluster._policy.stats
+    tune_line = (f"# tune: hits={stats.get('tune_hits', 0)}"
+                 f" misses={stats.get('tune_misses', 0)}"
+                 f" races={stats.get('tune_races', 0)}"
+                 f" warm={cluster.tune_db_warm}")
+    results["tuning"] = {"hits": stats.get("tune_hits", 0),
+                         "misses": stats.get("tune_misses", 0),
+                         "races": stats.get("tune_races", 0),
+                         "warm_started": cluster.tune_db_warm}
+    if cluster.tune_db is not None:
+        db = cluster.tune_db
+        results["tuning"]["tunedb"] = db.describe()
+        tune_line += (f" db={db.path} entries={len(db)}"
+                      f"{' (frozen)' if db.frozen else ''}")
+    print(tune_line)
     failed = results.pop("failed")
     decode_rows = _decode_rows(results)
     if decode_rows:

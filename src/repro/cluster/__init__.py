@@ -10,6 +10,7 @@ repro.cluster` from a kernel module stays cheap and cycle-free.
 from repro.cluster.policy import (KernelPolicy, as_policy,  # noqa: F401
                                   current_policy, default_policy, scoped,
                                   use_policy)
+from repro.kernels.tunedb import TuneDB  # noqa: F401  (dependency-light)
 
 _SESSION_EXPORTS = ("Cluster", "Program", "TrainProgram", "ServeProgram",
                     "ServeSessionProgram", "DryRunProgram", "BenchProgram",
@@ -17,8 +18,8 @@ _SESSION_EXPORTS = ("Cluster", "Program", "TrainProgram", "ServeProgram",
                     "CompiledDryRun", "CompiledBench")
 
 __all__ = list(_SESSION_EXPORTS) + [
-    "KernelPolicy", "as_policy", "current_policy", "default_policy",
-    "scoped", "use_policy",
+    "KernelPolicy", "TuneDB", "as_policy", "current_policy",
+    "default_policy", "scoped", "use_policy",
 ]
 
 

@@ -41,18 +41,30 @@ from typing import Any, Iterator, Mapping
 MODES = ("tuned", "fused", "reference", "interpret")
 
 
+TUNINGS = ("auto", "timed", "modeled", "frozen")
+
+
 @dataclasses.dataclass(frozen=True)
 class KernelPolicy:
     """Kernel-selection policy: a global mode plus per-op overrides.
 
+    ``tuning`` steers how autotune-on-miss picks a blocking: ``"timed"``
+    races the top modeled candidates plus the default on device and keeps
+    the measured winner (writing it through to the active TuneDB);
+    ``"modeled"`` keeps the legacy score-only pick; ``"frozen"`` is the CI
+    determinism mode — score-only pick, and the TuneDB is never written.
+    ``"auto"`` (the default) defers to ``REPRO_TUNE_MODE`` (itself
+    defaulting to ``timed``) — see ``kernels.tunedb.tune_mode``.
+
     ``stats`` is a mutable per-instance counter dict (ref_calls,
-    pallas_calls, tune_hits, tune_misses, block_overrides) filled in by the
-    dispatch sites — excluded from equality so two policies with the same
-    knobs compare equal regardless of traffic.
+    pallas_calls, tune_hits, tune_misses, tune_races, block_overrides)
+    filled in by the dispatch sites — excluded from equality so two
+    policies with the same knobs compare equal regardless of traffic.
     """
 
     mode: str = "tuned"
     overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    tuning: str = "auto"
     stats: dict = dataclasses.field(default_factory=dict, compare=False,
                                     repr=False)
 
@@ -60,6 +72,9 @@ class KernelPolicy:
         if self.mode not in MODES:
             raise ValueError(f"unknown policy mode {self.mode!r}; "
                              f"expected one of {MODES}")
+        if self.tuning not in TUNINGS:
+            raise ValueError(f"unknown tuning {self.tuning!r}; "
+                             f"expected one of {TUNINGS}")
         for op, v in self.overrides.items():
             if isinstance(v, str):
                 if v not in MODES:
@@ -116,9 +131,15 @@ class KernelPolicy:
             key = pipeline.shape_key(shapes, dtype_bytes)
             rec = registry.get_kernel_tune(name, key)
             if rec is None:
+                # miss -> autotune: under "timed" tuning this compiles and
+                # races the top modeled candidates on synthetic operands
+                # (the real ones may be tracers) and keeps the measured
+                # winner, bumping tune_races and writing the TuneDB
                 self.bump("tune_misses")
                 blocks = dict(pipeline.autotune(
-                    name, shapes, dtype_bytes=dtype_bytes).blocks)
+                    name, shapes, dtype_bytes=dtype_bytes,
+                    mode=None if self.tuning == "auto" else self.tuning
+                ).blocks)
             else:
                 self.bump("tune_hits")
                 blocks = dict(rec.blocks)
@@ -137,6 +158,7 @@ class KernelPolicy:
             "mode": self.mode,
             "overrides": {k: (v if isinstance(v, str) else dict(v))
                           for k, v in sorted(self.overrides.items())},
+            "tuning": self.tuning,
             "stats": dict(self.stats),
         }
 

@@ -37,6 +37,7 @@ from repro.configs import get as get_arch
 from repro.configs.registry import (ArchConfig, SHAPES, cell_supported,
                                     kernel_tunes)
 from repro.core import addressing, compat
+from repro.kernels import tunedb
 from repro.models import steps
 from repro.runtime import (CompileCache, ServeLoop, TrainLoop,
                            TrainLoopConfig, engine)
@@ -135,11 +136,21 @@ class Cluster:
     `arch` may be an arch name (``"qwen3-14b-smoke"``), an ArchConfig, or
     None for a kernel-only cluster (policy + tunes + bench programs, no
     model). `mesh` defaults to all local devices on a (data, model) mesh.
+
+    `tune_db` is the persistent timed-tune database: a
+    `kernels.tunedb.TuneDB`, a path to open one, or None to fall back to
+    the ``REPRO_TUNE_DB`` env default (which may itself be unset — no
+    persistence). When a DB resolves, the cluster warm-starts
+    KERNEL_TUNES from it (so `tuned_call` hits instead of racing) and
+    installs it as the active write-through target for new races; the
+    warm-start count is kept in ``tune_db_warm`` and surfaced by
+    `Program.report()` alongside the policy's tune_hits/misses/races.
     """
 
     def __init__(self, arch: "str | ArchConfig | None" = None, mesh=None, *,
                  policy: "KernelPolicy | str | None" = None,
-                 rules_overrides=None):
+                 rules_overrides=None,
+                 tune_db: "tunedb.TuneDB | str | None" = None):
         self.arch: ArchConfig | None = (
             get_arch(arch) if isinstance(arch, str) else arch)
         self.mesh = mesh if mesh is not None else compat.make_mesh(
@@ -151,6 +162,12 @@ class Cluster:
                                               overrides=rules_overrides)
         self._policy = as_policy(policy)
         self.compile_cache = CompileCache()
+        self.tune_db = tunedb.resolve_db(tune_db)
+        self.tune_db_warm = 0
+        if self.tune_db is not None:
+            self.tune_db_warm = self.tune_db.warm_start(
+                backend=jax.default_backend(), mode=self._policy.mode)
+            tunedb.set_active_db(self.tune_db)
 
     # -- kernel policy --------------------------------------------------------
     @property
@@ -292,6 +309,9 @@ class Program:
             "compile_cache": {"hits": self.cluster.compile_cache.hits,
                               "misses": self.cluster.compile_cache.misses},
         }
+        if self.cluster.tune_db is not None:
+            out["tunedb"] = dict(self.cluster.tune_db.describe(),
+                                 warm_started=self.cluster.tune_db_warm)
         if self._last_run is not None:
             out["result"] = {k: v for k, v in self._last_run.items()
                              if k != "params"}

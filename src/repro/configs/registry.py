@@ -211,7 +211,14 @@ class KernelTuneRecord:
 
     `blocks` / `default_blocks` are sorted (name, value) tuples so records
     stay hashable; `modeled_seconds` are the pipeline cost-model scores the
-    autotuner ranked with (roofline terms x interconnect locality penalty).
+    autotuner *ranked* candidates with (roofline terms x interconnect
+    locality penalty). The winner itself is picked by on-device timing:
+    `measured_us` / `default_us` are the raced wall times (median of
+    repeats) of the winning blocking and the hand-picked default, and
+    `measured_speedup` is their ratio — the only speedup this record
+    claims. `source` says how the record was produced: "timed" (raced),
+    "modeled" (score-only fallback — frozen mode or no operand factory),
+    or "db" (warm-started from a TuneDB written by an earlier timed run).
     """
 
     kernel: str
@@ -223,10 +230,26 @@ class KernelTuneRecord:
     # fused kernels only: the intermediate write+read the fusion removed
     # from HBM under the winning blocking (0.0 for unfused kernels)
     saved_bytes: float = 0.0
+    # timed-race results (0.0 when source == "modeled": never raced)
+    measured_us: float = 0.0
+    default_us: float = 0.0
+    source: str = "modeled"
 
     @property
-    def modeled_speedup(self) -> float:
-        return self.default_modeled_seconds / max(self.modeled_seconds, 1e-30)
+    def timed(self) -> bool:
+        return self.measured_us > 0.0
+
+    @property
+    def measured_speedup(self) -> float:
+        """Real raced speedup of the tuned blocking over the default.
+
+        >= 1.0 by construction for timed records (the default is always in
+        the race, so the winner is never measurably slower); 1.0 for
+        modeled-only records, which claim nothing.
+        """
+        if not self.timed:
+            return 1.0
+        return self.default_us / max(self.measured_us, 1e-30)
 
 
 KERNEL_TUNES: dict[tuple[str, str], KernelTuneRecord] = {}

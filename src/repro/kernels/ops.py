@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +81,10 @@ class OpDescriptor:
     """A kernel's public contract in one place.
 
     `shapes(*operands)` maps the wrapper's runtime operands to the
-    pipeline-layer shape dict (the autotuner key); `reference` is the
+    pipeline-layer shape dict (the autotuner key); `operands(shapes,
+    dtype)` is its inverse — synthetic random operands for a shape dict,
+    which is what the autotuner's timed race runs candidates on (the real
+    operands at a tuned_call miss may be jit tracers); `reference` is the
     pure-jnp composition the "reference" policy mode routes to (and the
     custom-VJP backward recomputes through, for fused kernels);
     `streamed_operand` is the index of the main streamed operand — the one
@@ -96,6 +99,7 @@ class OpDescriptor:
     reference: Callable | None = None
     streamed_operand: int = 0
     fused: bool = False
+    operands: Callable[[dict, Any], tuple] | None = None
 
 
 OPS: dict[str, OpDescriptor] = {}
@@ -438,6 +442,68 @@ def _shapes_flash_attention_proj(q, k, v, wo):
             "dm": wo.shape[-1]}
 
 
+# -- operand factories (the race's synthetic inputs, one per kernel) ---------
+
+
+def _rand(seed: int, shape: tuple, dtype):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) \
+        .astype(dtype)
+
+
+def _mk_axpy(s, dt):
+    return (2.0, _rand(0, (s["m"], s["n"]), dt), _rand(1, (s["m"], s["n"]), dt))
+
+
+def _mk_dotp(s, dt):
+    return (_rand(2, (s["m"], s["n"]), dt), _rand(3, (s["m"], s["n"]), dt))
+
+
+def _mk_matmul(s, dt):
+    return (_rand(4, (s["m"], s["k"]), dt), _rand(5, (s["k"], s["n"]), dt))
+
+
+def _mk_conv2d(s, dt):
+    return (_rand(6, (s["h"], s["w"]), dt), _rand(7, (3, 3), dt))
+
+
+def _mk_dct8x8(s, dt):
+    return (_rand(8, (s["n"], 8, 8), dt),)
+
+
+def _mk_rmsnorm(s, dt):
+    return (_rand(9, (s["m"], s["d"]), dt),
+            _rand(10, (s["d"],), dt) * jnp.asarray(0.1, dt))
+
+
+def _mk_flash_attention(s, dt):
+    b, h, kv, sq, hd = (s[k] for k in ("b", "h", "kv", "s", "hd"))
+    return (_rand(11, (b, h, sq, hd), dt), _rand(12, (b, kv, sq, hd), dt),
+            _rand(13, (b, kv, sq, hd), dt))
+
+
+def _mk_rmsnorm_matmul(s, dt):
+    return (_rand(14, (s["m"], s["k"]), dt),
+            _rand(15, (s["k"],), dt) * jnp.asarray(0.1, dt),
+            _rand(16, (s["k"], s["n"]), dt))
+
+
+def _mk_matmul_bias_act(s, dt):
+    return (_rand(17, (s["m"], s["k"]), dt), _rand(18, (s["k"], s["n"]), dt),
+            _rand(19, (s["n"],), dt))
+
+
+def _mk_matmul_residual_add(s, dt):
+    return (_rand(20, (s["m"], s["k"]), dt), _rand(21, (s["k"], s["n"]), dt),
+            _rand(22, (s["m"], s["n"]), dt))
+
+
+def _mk_flash_attention_proj(s, dt):
+    b, h, kv, sq, hd, dm = (s[k] for k in ("b", "h", "kv", "s", "hd", "dm"))
+    return (_rand(23, (b, h, sq, hd), dt), _rand(24, (b, kv, sq, hd), dt),
+            _rand(25, (b, kv, sq, hd), dt),
+            _rand(26, (h, hd, dm), dt) * jnp.asarray(0.1, dt))
+
+
 def _ref_axpy(alpha, x, y, **_):
     return _ref.axpy(alpha, x, y)
 
@@ -471,23 +537,30 @@ def _ref_flash_attention_proj_op(q, k, v, wo, *, causal: bool = True, **_):
 
 
 for _desc in (
-    OpDescriptor("axpy", axpy, _shapes_axpy, _ref_axpy, streamed_operand=1),
-    OpDescriptor("dotp", dotp, _shapes_dotp, _ref_dotp),
-    OpDescriptor("matmul", matmul, _shapes_matmul, _ref_matmul),
-    OpDescriptor("conv2d", conv2d_3x3, _shapes_conv2d, _ref_conv2d),
-    OpDescriptor("dct8x8", dct8x8, _shapes_dct8x8, _ref_dct8x8),
-    OpDescriptor("rmsnorm", rmsnorm, _shapes_rmsnorm, _ref_rmsnorm),
+    OpDescriptor("axpy", axpy, _shapes_axpy, _ref_axpy, streamed_operand=1,
+                 operands=_mk_axpy),
+    OpDescriptor("dotp", dotp, _shapes_dotp, _ref_dotp, operands=_mk_dotp),
+    OpDescriptor("matmul", matmul, _shapes_matmul, _ref_matmul,
+                 operands=_mk_matmul),
+    OpDescriptor("conv2d", conv2d_3x3, _shapes_conv2d, _ref_conv2d,
+                 operands=_mk_conv2d),
+    OpDescriptor("dct8x8", dct8x8, _shapes_dct8x8, _ref_dct8x8,
+                 operands=_mk_dct8x8),
+    OpDescriptor("rmsnorm", rmsnorm, _shapes_rmsnorm, _ref_rmsnorm,
+                 operands=_mk_rmsnorm),
     OpDescriptor("flash_attention", flash_attention, _shapes_flash_attention,
-                 _ref_flash_attention),
+                 _ref_flash_attention, operands=_mk_flash_attention),
     OpDescriptor("rmsnorm_matmul", rmsnorm_matmul, _shapes_rmsnorm_matmul,
-                 _ref_rmsnorm_matmul, fused=True),
+                 _ref_rmsnorm_matmul, fused=True,
+                 operands=_mk_rmsnorm_matmul),
     OpDescriptor("matmul_bias_act", matmul_bias_act, _shapes_matmul_epilogue,
-                 _ref_matmul_bias_act_op, fused=True),
+                 _ref_matmul_bias_act_op, fused=True,
+                 operands=_mk_matmul_bias_act),
     OpDescriptor("matmul_residual_add", matmul_residual_add,
                  _shapes_matmul_epilogue, _ref_matmul_residual_add,
-                 fused=True),
+                 fused=True, operands=_mk_matmul_residual_add),
     OpDescriptor("flash_attention_proj", flash_attention_proj,
                  _shapes_flash_attention_proj, _ref_flash_attention_proj_op,
-                 fused=True),
+                 fused=True, operands=_mk_flash_attention_proj),
 ):
     register_op(_desc)

@@ -16,3 +16,10 @@ if str(TESTS) not in sys.path:
 # NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device; only launch/dryrun.py forces 512 (and the
 # dry-run CI test spawns a subprocess with REPRO_DRYRUN_DEVICES=8).
+
+# Tests run under the deterministic "modeled" tune mode: a timed race on
+# every autotune-on-miss would make the suite slow and wall-clock-dependent.
+# Tests that target the timed path opt in explicitly (mode="timed", usually
+# with an injected timer — see test_tunedb.py). setdefault, so an outer
+# REPRO_TUNE_MODE still wins.
+os.environ.setdefault("REPRO_TUNE_MODE", "modeled")
