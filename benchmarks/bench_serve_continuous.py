@@ -15,7 +15,15 @@ Both paths share the decode cadence (chunk=K host-sync granularity) and
 the same per-step model cost; the only difference is the admission
 policy, so the ratio isolates the scheduling win.
 
+A third scenario exercises the SLO layer: a mixed-class workload
+(latency requests with deadlines arriving over a pool already full of
+throughput work, plus more best-effort than the shed watermark admits)
+reports per-class TTFT/latency percentiles, deadline misses, preemption
+and retry counts — the rows `check_gate.py --require classes` enforces.
+
 Row format: serve/{continuous|static},us_per_token,tokens_per_s=..;...
+            serve/class_{latency|throughput|best_effort},p99_lat_us,...
+            serve/slo,us_per_token,preemptions=..;retries=..;shed=..
 """
 
 from __future__ import annotations
@@ -61,6 +69,35 @@ def run_continuous(program, params, prompts, outs) -> dict:
         "p99_ms": float(np.percentile(np.asarray(lats), 99) * 1e3),
         "ttft_p50_ms": st["ttft_ms"]["p50"],
     }
+
+
+def run_classes(program, params, n_bulk: int, n_lat: int, seed: int) -> dict:
+    """The SLO scenario: fill the pool with throughput work, overflow the
+    shed watermark with best-effort, then land latency requests on the
+    full pool mid-stream — preemption, shedding, and per-class accounting
+    all fire deterministically (no wall-clock races: admission pressure
+    comes from queue shape, not timing)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    sess = program.open(params=params)
+    mk = lambda: rng.integers(0, 256, size=rng.integers(
+        1, MAX_PROMPT + 1)).astype(np.int32)
+    t0 = time.perf_counter()
+    for _ in range(n_bulk):                      # bulk floor: long outputs
+        sess.submit(mk(), 32, klass="throughput")
+    for _ in range(n_bulk):                      # past the watermark: shed
+        sess.submit(mk(), 16, klass="best_effort")
+    for _ in range(2):                           # pool fills with bulk work
+        sess.poll()
+    for _ in range(n_lat):                       # latency lands on a full
+        sess.submit(mk(), 8, klass="latency",    # pool -> preemption
+                    deadline_s=30.0)
+    sess.drain()
+    wall = time.perf_counter() - t0
+    st = sess.stats()
+    st["wall_s"] = wall
+    return st
 
 
 def run_static(decode, engine, cfg, params, prompts, outs) -> dict:
@@ -142,6 +179,14 @@ def main(smoke: bool = False) -> list[str]:
     cont = run_continuous(program, params, prompts, outs)
     stat = run_static(decode, engine, cfg, params, prompts, outs)
 
+    # SLO scenario: same cell, priority admission + preemption + shedding
+    n_bulk = 8 if smoke else 16
+    n_lat = 4 if smoke else 8
+    slo_program = cluster.compile(ServeSessionProgram(
+        slots=SLOTS, max_seq=max_seq, max_prompt=MAX_PROMPT, chunk=CHUNK,
+        shed_watermark=n_bulk + n_bulk // 2, preempt=True))
+    slo = run_classes(slo_program, params, n_bulk, n_lat, seed=2)
+
     lines = []
     for name, r in (("continuous", cont), ("static", stat)):
         us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] > 0 else float("nan")
@@ -153,6 +198,25 @@ def main(smoke: bool = False) -> list[str]:
             f"occupancy_pct={r['occupancy_pct']:.1f};"
             f"p99_ms={r['p99_ms']:.1f}{extra};"
             f"requests={n_req};slots={SLOTS};chunk={CHUNK}")
+    for klass in ("latency", "throughput", "best_effort"):
+        c = slo["classes"][klass]
+        lines.append(
+            f"serve/class_{klass},{c['latency_ms']['p99'] * 1e3:.1f},"
+            f"ttft_p50_ms={c['ttft_ms']['p50']:.1f};"
+            f"ttft_p99_ms={c['ttft_ms']['p99']:.1f};"
+            f"p99_ms={c['latency_ms']['p99']:.1f};"
+            f"deadline_miss={c['deadline_miss']};"
+            f"done={c['done']};submitted={c['submitted']};"
+            f"preempted={c['preempted']};shed={c['shed']}")
+    slo_us = (1e6 / slo["tokens_per_s"] if slo["tokens_per_s"] > 0
+              else float("nan"))
+    lines.append(
+        f"serve/slo,{slo_us:.1f},"
+        f"tokens_per_s={slo['tokens_per_s']:.1f};"
+        f"preemptions={slo['preemptions']};retries={slo['retries']};"
+        f"shed={slo['requests_shed']};deadline_miss={slo['deadline_miss']};"
+        f"requests_done={slo['requests_done']};"
+        f"occupancy_pct={slo['occupancy_pct']:.1f}")
     return lines
 
 

@@ -12,11 +12,16 @@ Checks (each prints one `gate ok:`/`gate FAIL:` line; any FAIL exits 1):
   require comma-separated section presence: `tuned` (>=1 tuned row),
           `fused` (>=1 `table1_fused/*` row with both timings),
           `decode` (K1 + K16 rows, positive tok/s),
-          `serve`  (continuous + static rows, positive tok/s)
+          `serve`  (continuous + static rows, positive tok/s),
+          `classes` (per-class SLO rows: latency/throughput/best_effort +
+          the serve/slo roll-up, with the scripted contention actually
+          exercised — >=1 preemption, >=1 shed, 0 latency deadline misses)
   baseline (optional, vs a committed copy of BENCH_table1.json):
           decode K16 stall_pct must not rise more than --stall-tol
           percentage points; serve continuous occupancy_pct must not drop
-          more than --occ-tol percentage points.
+          more than --occ-tol percentage points; per-class p99 latency and
+          TTFT p99 must not rise more than --class-tol (fraction), and
+          per-class deadline misses must not exceed the baseline.
 
 Usage (the CI perf-gate job):
 
@@ -32,7 +37,10 @@ import json
 import sys
 from pathlib import Path
 
-REQUIREMENTS = ("tuned", "fused", "decode", "serve")
+REQUIREMENTS = ("tuned", "fused", "decode", "serve", "classes")
+
+CLASS_ROWS = ("serve/class_latency", "serve/class_throughput",
+              "serve/class_best_effort")
 
 
 def _derived(row: dict) -> dict[str, str]:
@@ -97,15 +105,32 @@ def check_require(gate: Gate, record: dict, require: list[str]) -> None:
                    f"decode rows {sorted(by)} with positive tok/s")
     if "serve" in require:
         by = _by_name(record.get("serve_continuous", []))
-        ok = {"serve/continuous", "serve/static"} <= set(by) and all(
-            float(_derived(r).get("tokens_per_s", 0)) > 0
-            for r in by.values())
+        need = {"serve/continuous", "serve/static"}
+        ok = need <= set(by) and all(
+            float(_derived(by[n]).get("tokens_per_s", 0)) > 0 for n in need)
         gate.check(ok, "require",
-                   f"serve rows {sorted(by)} with positive tok/s")
+                   f"serve rows {sorted(set(by) & need)} with positive tok/s")
+    if "classes" in require:
+        by = _by_name(record.get("serve_continuous", []))
+        missing = [n for n in CLASS_ROWS + ("serve/slo",) if n not in by]
+        gate.check(not missing, "classes", f"SLO rows present "
+                   f"(missing: {missing or 'none'})")
+        if not missing:
+            slo = _derived(by["serve/slo"])
+            gate.check(int(slo.get("preemptions", 0)) >= 1, "classes",
+                       f"preemption exercised "
+                       f"({slo.get('preemptions')} preemptions)")
+            gate.check(int(slo.get("shed", 0)) >= 1, "classes",
+                       f"shedding exercised ({slo.get('shed')} shed)")
+            lat = _derived(by["serve/class_latency"])
+            gate.check(int(lat.get("deadline_miss", 1)) == 0, "classes",
+                       f"latency class deadline misses: "
+                       f"{lat.get('deadline_miss')}")
 
 
 def check_baseline(gate: Gate, record: dict, baseline: dict,
-                   stall_tol: float, occ_tol: float) -> None:
+                   stall_tol: float, occ_tol: float,
+                   class_tol: float) -> None:
     new_dec = _by_name(record.get("decode", []))
     old_dec = _by_name(baseline.get("decode", []))
     if "decode/K16" in new_dec and "decode/K16" in old_dec:
@@ -122,6 +147,20 @@ def check_baseline(gate: Gate, record: dict, baseline: dict,
         gate.check(new_occ >= old_occ - occ_tol, "baseline",
                    f"serve occupancy {new_occ:.1f}% vs baseline "
                    f"{old_occ:.1f}% (-{occ_tol:.1f}pt tol)")
+    for name in CLASS_ROWS:
+        if name not in new_srv or name not in old_srv:
+            continue
+        new_kv, old_kv = _derived(new_srv[name]), _derived(old_srv[name])
+        klass = name.removeprefix("serve/class_")
+        for field in ("p99_ms", "ttft_p99_ms"):
+            new_v, old_v = float(new_kv[field]), float(old_kv[field])
+            gate.check(new_v <= old_v * (1.0 + class_tol), "baseline",
+                       f"{klass} {field} {new_v:.1f} vs baseline "
+                       f"{old_v:.1f} (tol {class_tol:.0%})")
+        new_m, old_m = (int(new_kv.get("deadline_miss", 0)),
+                        int(old_kv.get("deadline_miss", 0)))
+        gate.check(new_m <= old_m, "baseline",
+                   f"{klass} deadline misses {new_m} vs baseline {old_m}")
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -136,6 +175,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="decode stall_pct regression tolerance (abs points)")
     ap.add_argument("--occ-tol", type=float, default=10.0,
                     help="serve occupancy regression tolerance (abs points)")
+    ap.add_argument("--class-tol", type=float, default=1.0,
+                    help="per-class p99/TTFT regression tolerance (fraction;"
+                         " wall-clock percentiles are CI-noisy, so default"
+                         " allows 2x before failing)")
     ap.add_argument("--require", default="tuned",
                     help=f"comma-separated presence checks {REQUIREMENTS}")
     args = ap.parse_args(argv)
@@ -152,7 +195,8 @@ def main(argv: list[str] | None = None) -> int:
     check_require(gate, record, require)
     if args.baseline:
         baseline = json.loads(Path(args.baseline).read_text())
-        check_baseline(gate, record, baseline, args.stall_tol, args.occ_tol)
+        check_baseline(gate, record, baseline, args.stall_tol, args.occ_tol,
+                       args.class_tol)
 
     if gate.failures:
         print(f"perf gate: {len(gate.failures)} FAILURE(S)", file=sys.stderr)

@@ -1,0 +1,136 @@
+"""Chaos serving: scripted faults against a live ServeSession.
+
+MemPool's robustness claim is architectural — one stalled core never
+wedges the cluster, a dead core only costs its own lanes. This example
+exercises the serving analogue end to end: a Poisson arrival stream of
+mixed-priority requests runs twice through the same compiled session
+cell, once fault-free (the reference) and once under a scripted
+`FaultPlan` that kills a slot mid-decode (quarantine + requeue), NaN-
+corrupts another slot's cache rows (sentinel scan + recycle + requeue),
+and wedges a device wait (watchdog -> `SessionWedged` ->
+`recover_wedged()` pool rebuild). The recovery contract is then checked
+bit for bit: every request that completes under chaos must produce
+exactly the tokens the fault-free run produced. Exit code 1 on any
+divergence — this is the CI chaos-smoke job's assertion.
+
+Prints a `# chaos:` summary line with fault/recovery counts.
+
+    PYTHONPATH=src python examples/serve_chaos.py --requests 16
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.cluster import Cluster, ServeSessionProgram
+from repro.runtime import FaultPlan, SessionWedged
+
+CLASS_MIX = ("latency", "throughput", "throughput", "best_effort")
+
+
+def run_workload(program, params, prompts, out_lens, arrivals, plan=None):
+    """Drive one session over the workload; returns (handles, stats,
+    wedge_recoveries). Faults raise `SessionWedged` mid-poll; the driver
+    recovers and keeps serving — the stream never dies."""
+    session = program.open(params=params, faults=plan)
+    handles = []
+    wedges = 0
+    t0 = time.perf_counter()
+    next_up = 0
+    n = len(prompts)
+    while next_up < n or session.scheduler.busy:
+        now = time.perf_counter() - t0
+        while next_up < n and arrivals[next_up] <= now:
+            handles.append(session.submit(
+                prompts[next_up], int(out_lens[next_up]),
+                klass=CLASS_MIX[next_up % len(CLASS_MIX)]))
+            next_up += 1
+        try:
+            events = session.poll()
+        except SessionWedged as e:
+            print(f"  wedged at chunk {e.chunk} (watchdog "
+                  f"{e.timeout_s:.2f}s) — rebuilding the pool")
+            session.recover_wedged()
+            wedges += 1
+            continue
+        if not events and next_up < n:
+            time.sleep(min(0.005, max(arrivals[next_up] - now, 0.0)))
+    return handles, session.stats(), wedges
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="mean request arrivals per second (Poisson)")
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--watchdog", type=float, default=0.5,
+                    help="per-chunk device-wait bound (seconds)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cluster = Cluster(args.arch + "-smoke")
+    cfg = cluster.arch
+    program = cluster.compile(ServeSessionProgram(
+        slots=args.slots, max_seq=64, max_prompt=8, chunk=args.chunk,
+        watchdog_s=args.watchdog, max_retries=3, retry_backoff_s=0.01))
+    params = program.init_params()
+
+    rng = np.random.default_rng(args.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    prompts = [rng.integers(0, cfg.vocab, size=rng.integers(1, 9))
+               .astype(np.int32) for _ in range(args.requests)]
+    out_lens = rng.choice([8, 12, 16, 24, 32], size=args.requests)
+
+    # one of each failure mode, spread over the run's chunk timeline
+    plan = (FaultPlan()
+            .kill_slot(at_chunk=3, slot=1)
+            .corrupt_nan(at_chunk=5, slot=2)
+            .wedge(at_chunk=8))
+
+    print(f"arch={cfg.name} slots={args.slots} chunk={args.chunk} — "
+          f"{args.requests} requests, ~{args.rate}/s Poisson, "
+          f"faults: kill@3/slot1, nan@5/slot2, wedge@8")
+    print("reference run (fault-free):")
+    ref_handles, ref_stats, _ = run_workload(program, params, prompts,
+                                             out_lens, arrivals)
+    print(f"  {ref_stats['requests_done']} done, "
+          f"{ref_stats['emitted_total']} tokens")
+    print("chaos run:")
+    handles, stats, wedges = run_workload(program, params, prompts,
+                                          out_lens, arrivals, plan=plan)
+
+    survivors = mismatches = 0
+    for i, (h, ref) in enumerate(zip(handles, ref_handles)):
+        if not h.ok:
+            print(f"  req {i}: not completed under chaos "
+                  f"({h.state}{': ' + h.fail_reason if h.fail_reason else ''})")
+            continue
+        survivors += 1
+        if not (ref.ok and np.array_equal(h.tokens, ref.tokens)):
+            mismatches += 1
+            print(f"  req {i}: DIVERGED from the fault-free run "
+                  f"({h.tokens.size} vs {ref.tokens.size} tokens)")
+
+    fired = plan.summary()["by_kind"]
+    identical = "yes" if mismatches == 0 else "NO"
+    print(f"# chaos: kills={fired['kill_slot']} "
+          f"corruptions={fired['corrupt_nan']} wedges={wedges} "
+          f"refill_errors={fired['refill_error']} "
+          f"retries={stats['retries']} preemptions={stats['preemptions']} "
+          f"failed={stats['requests_failed']} "
+          f"quarantined={len(stats['quarantined_slots'])} "
+          f"survivors={survivors}/{args.requests} bit_identical={identical}")
+    if mismatches or not plan.exhausted:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

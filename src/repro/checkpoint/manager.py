@@ -79,16 +79,16 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- save
     def save(self, step: int, state, *, block: bool = False):
-        """Snapshot is taken synchronously; serialization is async."""
+        """Snapshot is taken synchronously; serialization is async. A
+        failed async write from the *previous* save surfaces here (and on
+        `wait()`) — a dropped checkpoint is never silent."""
         self.wait()
-        if self._error:
-            raise self._error
         snapshot = _flatten(jax.device_get(state))
 
         def _write():
             try:
                 self._write_step(step, snapshot)
-            except Exception as e:   # pragma: no cover - surfaced on next save
+            except Exception as e:   # surfaced on wait() / next save()
                 self._error = e
 
         if self.async_save and not block:
@@ -125,9 +125,16 @@ class CheckpointManager:
             shutil.rmtree(self.dir / f"step-{s:09d}", ignore_errors=True)
 
     def wait(self):
+        """Block until the in-flight async write lands. Raises the writer
+        thread's exception (once) if the write failed — callers relying on
+        `wait()` before a restart must not believe a checkpoint exists
+        when it never hit disk."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     # ---------------------------------------------------------- restore
     def all_steps(self) -> list[int]:

@@ -86,10 +86,17 @@ class ServeSessionProgram:
     """Request-level serving: a slot pool with continuous batching.
 
     Compiles to a `CompiledServeSession`; `open()` returns a live
-    `ServeSession` with `submit(prompt, max_new) -> RequestHandle`,
-    `poll()`/`stream()` for incremental tokens, `cancel(handle)`, and
-    `drain()`. `run()` is the one-shot path (fill the pool with one
-    batch, drain, legacy `ServeProgram`-shaped result).
+    `ServeSession` with `submit(prompt, max_new, klass=..., deadline_s=...)
+    -> RequestHandle`, `poll()`/`stream()` for incremental tokens,
+    `cancel(handle)`, and `drain()`. `run()` is the one-shot path (fill
+    the pool with one batch, drain, legacy `ServeProgram`-shaped result).
+
+    The SLO/robustness knobs configure the session's priority admission
+    (`shed_watermark`, `aging_rounds`), slot preemption (`preempt`), the
+    per-chunk device-wait watchdog (`watchdog_s` -> `SessionWedged`),
+    fault recovery (`max_retries`, `retry_backoff_s`), and the NaN
+    corruption sentinel (`nan_check`); `open(faults=FaultPlan(...))` arms
+    scripted fault injection for chaos runs.
     """
 
     slots: int = 4                         # slot-pool size (batch rows)
@@ -101,6 +108,20 @@ class ServeSessionProgram:
     chunk: int = 16                        # decode steps per host sync
     max_queue: int | None = None           # bounded-queue backpressure
     admission: str = "fifo"                # or "longest_prefix"
+    shed_watermark: int | None = None      # total queue depth that sheds
+    #   best-effort work (latency/throughput get QueueFull instead)
+    aging_rounds: int = 8                  # anti-starvation: +1 effective
+    #   class rank per this many admission rounds waited
+    preempt: bool = True                   # latency may checkpoint + evict
+    #   a lower-class running slot (bit-identical resume)
+    watchdog_s: float | None = None        # per-chunk device-wait bound;
+    #   None = wait forever (poll(timeout_s=...) still overrides)
+    max_retries: int = 2                   # fault-recovery restarts per
+    #   request before it fails with "retries_exhausted"
+    retry_backoff_s: float = 0.05          # base of the exponential
+    #   re-admission backoff after a fault restart
+    nan_check: bool = False                # scan cache rows for NaN every
+    #   chunk (auto-on when a FaultPlan scripts corruption)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -487,6 +508,17 @@ class CompiledServeSession(Program):
                                                    eos_id=spec.eos_id)
         self._refill_fn = engine.make_session_refill(
             cache_zero=steps.zero_cache_slots)
+        # checkpoint/restore + fault programs over the model cache layout
+        # (stacked layer axes — the steps.py helpers know which axis is
+        # batch per leaf; the engine defaults only cover flat caches)
+        self._snapshot_fn = engine.make_slot_snapshot(
+            cache_take=steps.take_cache_slot)
+        self._restore_fn = engine.make_slot_restore(
+            cache_put=steps.put_cache_slot)
+        self._nan_scan_fn = engine.make_nan_scan(
+            cache_nan=steps.nan_cache_slots)
+        self._corrupt_fn = engine.make_slot_corrupt(
+            cache_fill=steps.fill_cache_slots)
         self._last_session = None
 
     def init_params(self, seed: int | None = None):
@@ -495,22 +527,40 @@ class CompiledServeSession(Program):
         return steps.init_params(cfg, jax.random.PRNGKey(seed),
                                  max_seq=self.spec.max_seq)
 
-    def open(self, params=None):
-        """A fresh `ServeSession` over this compiled cell (own slot pool,
-        queue, scheduler, and stall clock)."""
-        from repro.runtime import ServeSession
-
+    def _make_state(self):
         cfg, spec = self.cluster.arch, self.spec
-        if params is None:
-            params = self.init_params()
         cache = steps.init_cache(cfg, spec.slots,
                                  steps.decode_cache_len(cfg, spec.max_seq))
-        state = engine.init_session_state(cache, spec.slots, spec.max_prompt)
-        sess = ServeSession(self._chunk_fn, self._refill_fn, params, state,
+        return engine.init_session_state(cache, spec.slots, spec.max_prompt)
+
+    def open(self, params=None, faults=None):
+        """A fresh `ServeSession` over this compiled cell (own slot pool,
+        queue, scheduler, and stall clock). `faults` arms a
+        `runtime.FaultPlan` against the session (chaos testing)."""
+        from repro.runtime import ServeSession
+
+        spec = self.spec
+        if params is None:
+            params = self.init_params()
+        sess = ServeSession(self._chunk_fn, self._refill_fn, params,
+                            self._make_state(),
                             n_slots=spec.slots, chunk=spec.chunk,
                             max_prompt=spec.max_prompt, max_seq=spec.max_seq,
                             eos_id=spec.eos_id, max_queue=spec.max_queue,
-                            admission=spec.admission)
+                            admission=spec.admission,
+                            shed_watermark=spec.shed_watermark,
+                            aging_rounds=spec.aging_rounds,
+                            preempt=spec.preempt,
+                            snapshot_fn=self._snapshot_fn,
+                            restore_fn=self._restore_fn,
+                            nan_scan_fn=self._nan_scan_fn,
+                            corrupt_fn=self._corrupt_fn,
+                            state_factory=self._make_state,
+                            watchdog_s=spec.watchdog_s,
+                            max_retries=spec.max_retries,
+                            retry_backoff_s=spec.retry_backoff_s,
+                            nan_check=spec.nan_check,
+                            faults=faults)
         self._last_session = sess
         return sess
 

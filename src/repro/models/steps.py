@@ -122,27 +122,91 @@ def init_cache(cfg, B: int, cache_len: int):
     return init_tree(cache_specs(cfg, B, cache_len), jax.random.PRNGKey(0))
 
 
+def _map_cache_axes(cache, fn_for_axis):
+    """Apply `fn_for_axis(batch_axis)` leaf-wise over a decode cache.
+    Stacked super-block leaves carry a leading `layers` axis, so the batch
+    axis is 1 under `blocks` and 0 under `rem` — every per-slot cache
+    operation (zero, fill, take, put, NaN scan) shares this layout fact."""
+    out = {"blocks": jax.tree.map(fn_for_axis(1), cache["blocks"])}
+    if "rem" in cache:
+        out["rem"] = jax.tree.map(fn_for_axis(0), cache["rem"])
+    return out
+
+
+def fill_cache_slots(cache, mask, value):
+    """Fill the per-slot decode state of masked batch rows with `value`.
+
+    `mask` is (B,) bool. Non-float leaves are left untouched when `value`
+    is not finite (NaN fault injection must not corrupt integer state)."""
+    import math
+    finite = math.isfinite(value)
+
+    def at_axis(axis):
+        def one(c):
+            if not finite and not jnp.issubdtype(c.dtype, jnp.inexact):
+                return c
+            shape = [1] * c.ndim
+            shape[axis] = mask.shape[0]
+            return jnp.where(mask.reshape(shape),
+                             jnp.asarray(value, c.dtype), c)
+        return one
+
+    return _map_cache_axes(cache, at_axis)
+
+
 def zero_cache_slots(cache, mask):
     """Zero the per-slot decode state of masked batch rows.
 
     `mask` is (B,) bool. Needed when a slot is recycled for a new request:
     KV rows beyond the (reset) position are masked out by decode attention
     anyway, but recurrent block states (mLSTM/sLSTM/RG-LRU matrices, conv
-    tails) carry the old request's activations and must be cleared. Stacked
-    super-block leaves carry a leading `layers` axis, so the batch axis is
-    1 under `blocks` and 0 under `rem`.
+    tails) carry the old request's activations and must be cleared.
     """
+    return fill_cache_slots(cache, mask, 0.0)
+
+
+def take_cache_slot(cache, slot):
+    """Slice one slot's rows out of every cache leaf (the device half of a
+    slot checkpoint — see `engine.make_slot_snapshot`)."""
+    def at_axis(axis):
+        return lambda c: jax.lax.dynamic_index_in_dim(c, slot, axis=axis,
+                                                      keepdims=False)
+    return _map_cache_axes(cache, at_axis)
+
+
+def put_cache_slot(cache, slot, rows):
+    """Write `rows` (a `take_cache_slot` result) back into slot `slot` —
+    bit-exact, so a preempted request resumes identically."""
+    def put(axis, c, r):
+        idx = [slice(None)] * c.ndim
+        idx[axis] = slot
+        return c.at[tuple(idx)].set(r)
+
+    out = {"blocks": jax.tree.map(lambda c, r: put(1, c, r),
+                                  cache["blocks"], rows["blocks"])}
+    if "rem" in cache:
+        out["rem"] = jax.tree.map(lambda c, r: put(0, c, r),
+                                  cache["rem"], rows["rem"])
+    return out
+
+
+def nan_cache_slots(cache):
+    """(B,) bool: any-NaN per slot across every float cache leaf — the
+    corruption sentinel `engine.make_nan_scan` compiles for the session."""
+    flags = []
+
     def at_axis(axis):
         def one(c):
-            shape = [1] * c.ndim
-            shape[axis] = mask.shape[0]
-            return jnp.where(mask.reshape(shape),
-                             jnp.zeros((), c.dtype), c)
+            if jnp.issubdtype(c.dtype, jnp.inexact):
+                axes = tuple(i for i in range(c.ndim) if i != axis)
+                flags.append(jnp.any(jnp.isnan(c), axis=axes))
+            return c
         return one
 
-    out = {"blocks": jax.tree.map(at_axis(1), cache["blocks"])}
-    if "rem" in cache:
-        out["rem"] = jax.tree.map(at_axis(0), cache["rem"])
+    _map_cache_axes(cache, at_axis)
+    out = flags[0]
+    for f in flags[1:]:
+        out = out | f
     return out
 
 

@@ -1,8 +1,11 @@
 from .engine import (DecodeEngine, StallClock, init_session_state,  # noqa: F401
-                     make_decode_chunk, make_session_chunk,
-                     make_session_refill, make_train_chunk)
-from .scheduler import (QueueFull, Request, RequestHandle,  # noqa: F401
-                        SlotScheduler)
+                     make_decode_chunk, make_nan_scan, make_session_chunk,
+                     make_session_refill, make_slot_corrupt,
+                     make_slot_restore, make_slot_snapshot, make_train_chunk)
+from .faults import (Fault, FaultPlan, InjectedFault,  # noqa: F401
+                     SessionWedged)
+from .scheduler import (QueueFull, Request, RequestFailed,  # noqa: F401
+                        RequestHandle, SlotScheduler)
 from .train_loop import TrainLoop, TrainLoopConfig  # noqa: F401
 from .serve_loop import ServeLoop, ServeSession  # noqa: F401
 from .compile_cache import CompileCache  # noqa: F401

@@ -80,6 +80,15 @@ class StallClock:
         self._last_sync_end = now
         return now
 
+    def sync_done(self, t_wait_start: float) -> float:
+        """Record a sync whose device wait happened externally (e.g. on a
+        watchdog thread): the wait ran from `t_wait_start` to now."""
+        now = time.perf_counter()
+        self.host_syncs += 1
+        self.device_wait_s += now - t_wait_start
+        self._last_sync_end = now
+        return now
+
     def report(self) -> dict:
         wall = time.perf_counter() - self._t_start
         return {
@@ -402,6 +411,134 @@ def make_session_refill(*, cache_zero: Callable | None = None,
         )
 
     return jax.jit(refill, donate_argnums=(0,) if donate else ())
+
+
+# ----------------------------------------------------------------------------
+# Slot-granular checkpoint/resume + fault detection — the elastic layer
+# ----------------------------------------------------------------------------
+#
+# MemPool's robustness story is that every PE executes independently: one
+# stalled or dead core never wedges the cluster, because the shared-L1 rows
+# it owned stay addressable. The serving analogue: a slot must be
+# *individually* checkpointable (preemption snapshots its KV rows + decode
+# counters and requeues the request for a bit-identical resume later) and
+# *individually* condemnable (a dead or corrupted slot is quarantined and
+# the pool degrades instead of crashing). These helpers are the device half
+# of that machinery; `ServeSession` (runtime/serve_loop.py) drives them.
+#
+# The per-request device rows that travel with a slot snapshot. `active`
+# and `age` are *slot* properties, not request properties — restore forces
+# active=True and bumps age like any other admission.
+SLOT_FIELDS = ("tok", "pos", "consumed", "prompt_len", "prompt_buf",
+               "budget", "emitted", "finished")
+
+
+def _default_cache_take(cache, slot):
+    """Slice slot `slot` out of a flat cache (batch axis 0 on every leaf).
+    Model caches with stacked layer axes pass `steps.take_cache_slot`."""
+    return jax.tree.map(
+        lambda c: jax.lax.dynamic_index_in_dim(c, slot, axis=0,
+                                               keepdims=False), cache)
+
+
+def _default_cache_put(cache, slot, rows):
+    """Inverse of `_default_cache_take` (batch axis 0 on every leaf)."""
+    return jax.tree.map(lambda c, r: c.at[slot].set(r), cache, rows)
+
+
+def _default_cache_fill(cache, mask, value):
+    """Fill masked batch rows of a flat cache with `value` (axis 0).
+    Non-float leaves are skipped when `value` is not finite (NaN fault
+    injection must not touch integer state)."""
+    import math
+
+    def one(c):
+        if (not jnp.issubdtype(c.dtype, jnp.inexact)
+                and not math.isfinite(value)):
+            return c
+        shape = (mask.shape[0],) + (1,) * (c.ndim - 1)
+        return jnp.where(mask.reshape(shape), jnp.asarray(value, c.dtype), c)
+    return jax.tree.map(one, cache)
+
+
+def _default_cache_nan(cache):
+    """(B,) bool: any-NaN per batch row of a flat cache (axis 0)."""
+    flags = [jnp.any(jnp.isnan(c), axis=tuple(range(1, c.ndim)))
+             for c in jax.tree.leaves(cache)
+             if jnp.issubdtype(c.dtype, jnp.inexact)]
+    if not flags:
+        return jnp.zeros((jax.tree.leaves(cache)[0].shape[0],), bool)
+    out = flags[0]
+    for f in flags[1:]:
+        out = out | f
+    return out
+
+
+def make_slot_snapshot(*, cache_take: Callable | None = None) -> Callable:
+    """Compile the slot-checkpoint program: `snapshot(state, slot) -> rows`.
+
+    `rows` is the pytree of slot `slot`'s per-request device state — its
+    cache rows plus every `SLOT_FIELDS` entry. Nothing is donated: the
+    pool state stays live (the slot is released/refilled separately).
+    The caller typically `jax.device_get`s the result so the snapshot
+    survives the pool's donation cycle on the host.
+    """
+    cache_take = cache_take or _default_cache_take
+
+    def snapshot(state, slot):
+        rows = {k: state[k][slot] for k in SLOT_FIELDS}
+        rows["cache"] = cache_take(state["cache"], slot)
+        return rows
+
+    return jax.jit(snapshot)
+
+
+def make_slot_restore(*, cache_put: Callable | None = None,
+                      donate: bool = True) -> Callable:
+    """Compile the slot-resume program: `restore(state, slot, rows) ->
+    state`. Writes a snapshot's rows back into slot `slot` — bit-exact,
+    so the resumed request continues exactly where it was preempted —
+    marks the slot active, and bumps its `age` (a resume is an admission).
+    The pool state is donated, like refill."""
+    cache_put = cache_put or _default_cache_put
+
+    def restore(state, slot, rows):
+        out = dict(state)
+        for k in SLOT_FIELDS:
+            out[k] = state[k].at[slot].set(rows[k])
+        out["cache"] = cache_put(state["cache"], slot, rows["cache"])
+        out["active"] = state["active"].at[slot].set(True)
+        out["age"] = state["age"].at[slot].add(1)
+        return out
+
+    return jax.jit(restore, donate_argnums=(0,) if donate else ())
+
+
+def make_nan_scan(*, cache_nan: Callable | None = None) -> Callable:
+    """Compile the corruption sentinel: `nan_scan(state) -> (B,) bool`,
+    true for any slot whose cache rows hold a NaN. One device reduction
+    per chunk when the session runs with fault detection on; the driver
+    quarantines/requeues flagged slots instead of streaming garbage."""
+    cache_nan = cache_nan or _default_cache_nan
+
+    def nan_scan(state):
+        return cache_nan(state["cache"])
+
+    return jax.jit(nan_scan)
+
+
+def make_slot_corrupt(*, cache_fill: Callable | None = None,
+                      donate: bool = True) -> Callable:
+    """Compile the fault-injection write: `corrupt(state, mask) -> state`
+    with masked slots' float cache rows set to NaN (integer rows
+    untouched). Only the fault harness calls this."""
+    cache_fill = cache_fill or _default_cache_fill
+
+    def corrupt(state, mask):
+        return dict(state,
+                    cache=cache_fill(state["cache"], mask, float("nan")))
+
+    return jax.jit(corrupt, donate_argnums=(0,) if donate else ())
 
 
 # ----------------------------------------------------------------------------

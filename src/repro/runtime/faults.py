@@ -1,0 +1,188 @@
+"""Fault injection + wedge detection for the serving session.
+
+MemPool's robustness claim is architectural: PEs execute independently,
+so one stalled core never wedges the cluster and a dead core only costs
+its own lanes. Nothing in a software system earns that property without
+being exercised — this module is the harness that exercises it. A
+`FaultPlan` scripts failures against a `ServeSession` at exact chunk
+indices, so chaos runs are reproducible and CI can assert the recovery
+contract: every surviving request's tokens are bit-identical to a
+fault-free run.
+
+Fault kinds (all fire exactly once, at their scripted chunk):
+
+* ``kill_slot``  — the slot's device row is declared dead at harvest of
+  chunk N. Recovery: quarantine the slot (the pool degrades, never
+  crashes), discard the request's partial tokens, requeue it with
+  bounded retries + exponential backoff.
+* ``corrupt_nan`` — the slot's float cache rows are overwritten with NaN
+  before chunk N dispatches. Detection is the session's NaN sentinel
+  scan on harvest; recovery requeues the request and recycles (zeroes)
+  the slot — transient corruption does not cost pool capacity.
+* ``wedge``      — chunk N's device wait never completes (the injected
+  wait blocks forever). Detection is the session watchdog
+  (``watchdog_s`` / ``poll(timeout_s=...)``), which raises
+  `SessionWedged` with the StallClock ledger attached; recovery is
+  `session.recover_wedged()` — rebuild the pool, requeue everything
+  that was running.
+* ``refill_error`` — the refill program raises at chunk boundary N. The
+  session un-admits the round and retries at the next boundary.
+
+The plan is injected per-session (``program.open(faults=plan)`` or the
+``faults=`` constructor argument) and threaded through the driver as
+query hooks — the session stays fault-free code when no plan is attached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+KINDS = ("kill_slot", "corrupt_nan", "wedge", "refill_error")
+
+
+class InjectedFault(RuntimeError):
+    """An error raised by the fault harness itself (e.g. refill_error)."""
+
+
+class SessionWedged(RuntimeError):
+    """The device never completed a chunk within the watchdog timeout.
+
+    Carries the session's StallClock ledger at the moment of detection
+    (`stall`) and the wedged chunk index (`chunk`), so the operator sees
+    how long the device sat silent and where. Raised by
+    `ServeSession.poll/stream/drain` when `timeout_s` (or the session's
+    `watchdog_s`) elapses; `session.recover_wedged()` rebuilds the pool.
+    """
+
+    def __init__(self, chunk: int, timeout_s: float, stall: dict):
+        super().__init__(
+            f"device did not complete chunk {chunk} within {timeout_s:.3f}s "
+            f"(host_syncs={stall.get('host_syncs')}, "
+            f"device_wait_s={stall.get('device_wait_s', 0.0):.3f})")
+        self.chunk = chunk
+        self.timeout_s = timeout_s
+        self.stall = stall
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scripted failure: `kind` at chunk `at_chunk` (slot-targeted
+    kinds carry `slot`)."""
+
+    kind: str
+    at_chunk: int
+    slot: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.at_chunk < 0:
+            raise ValueError(f"at_chunk must be >= 0, got {self.at_chunk}")
+        needs_slot = self.kind in ("kill_slot", "corrupt_nan")
+        if needs_slot and self.slot is None:
+            raise ValueError(f"{self.kind} needs a target slot")
+        if not needs_slot and self.slot is not None:
+            raise ValueError(f"{self.kind} does not take a slot")
+
+
+class FaultPlan:
+    """A reproducible script of failures, queried by the session driver.
+
+    Build fluently::
+
+        plan = (FaultPlan()
+                .kill_slot(at_chunk=2, slot=0)
+                .corrupt_nan(at_chunk=4, slot=1)
+                .wedge(at_chunk=6)
+                .refill_error(at_chunk=3))
+
+    Each fault fires exactly once; `fired` records what actually fired
+    (kind, chunk, slot) in firing order, and `summary()` aggregates it
+    for the `# chaos:` report line.
+    """
+
+    def __init__(self, faults: "list[Fault] | None" = None):
+        self.faults: list[Fault] = list(faults or [])
+        self.fired: list[tuple[str, int, int | None]] = []
+        self._consumed: set[int] = set()
+
+    # -- builders --------------------------------------------------------
+    def add(self, kind: str, at_chunk: int, slot: int | None = None):
+        self.faults.append(Fault(kind, at_chunk, slot))
+        return self
+
+    def kill_slot(self, at_chunk: int, slot: int) -> "FaultPlan":
+        return self.add("kill_slot", at_chunk, slot)
+
+    def corrupt_nan(self, at_chunk: int, slot: int) -> "FaultPlan":
+        return self.add("corrupt_nan", at_chunk, slot)
+
+    def wedge(self, at_chunk: int) -> "FaultPlan":
+        return self.add("wedge", at_chunk)
+
+    def refill_error(self, at_chunk: int) -> "FaultPlan":
+        return self.add("refill_error", at_chunk)
+
+    # -- driver queries (each consumes the fault it matches) -------------
+    def _take(self, kind: str, chunk: int) -> list[Fault]:
+        out = []
+        for i, f in enumerate(self.faults):
+            if i in self._consumed or f.kind != kind or f.at_chunk != chunk:
+                continue
+            self._consumed.add(i)
+            self.fired.append((f.kind, chunk, f.slot))
+            out.append(f)
+        return out
+
+    def kills(self, chunk: int) -> list[int]:
+        """Slots declared dead at harvest of this chunk."""
+        return [f.slot for f in self._take("kill_slot", chunk)]
+
+    def corrupts(self, chunk: int) -> list[int]:
+        """Slots whose cache rows go NaN before this chunk dispatches."""
+        return [f.slot for f in self._take("corrupt_nan", chunk)]
+
+    def wedged(self, chunk: int) -> bool:
+        """True when this chunk's device wait must never complete."""
+        return bool(self._take("wedge", chunk))
+
+    def check_refill(self, boundary: int) -> None:
+        """Raises `InjectedFault` when the refill at this chunk boundary
+        is scripted to fail."""
+        if self._take("refill_error", boundary):
+            raise InjectedFault(f"injected refill failure at chunk "
+                                f"boundary {boundary}")
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def has_wedge(self) -> bool:
+        return any(f.kind == "wedge" for f in self.faults)
+
+    @property
+    def pending_wedge(self) -> bool:
+        """A wedge is scripted and has not fired yet (the session checks
+        this before dispatching: a wedge with no watchdog would block the
+        driver forever, which is a harness misconfiguration)."""
+        return any(f.kind == "wedge" and i not in self._consumed
+                   for i, f in enumerate(self.faults))
+
+    @property
+    def has_corruption(self) -> bool:
+        return any(f.kind == "corrupt_nan" for f in self.faults)
+
+    @property
+    def exhausted(self) -> bool:
+        return len(self._consumed) == len(self.faults)
+
+    def summary(self) -> dict:
+        """{kind: fired count} plus planned totals, for the chaos line."""
+        fired: dict[str, int] = {k: 0 for k in KINDS}
+        for kind, _, _ in self.fired:
+            fired[kind] += 1
+        return {"planned": len(self.faults), "fired": len(self.fired),
+                "by_kind": fired}
+
+    def __repr__(self) -> str:
+        return (f"FaultPlan({len(self.faults)} faults, "
+                f"{len(self.fired)} fired)")

@@ -4,23 +4,45 @@ MemPool keeps hundreds of PEs under 2% stall because the shared-L1 banks
 are always addressable and the DMA engine refills them while compute
 proceeds. The serving analogue: a fixed pool of decode slots (the batch
 rows of the compiled session cell) that must never sit idle while work is
-queued. This module is the host-side half of that machinery — a bounded
-request queue plus a slot table with pluggable admission order; the
-device-side half (per-slot refill, masked stepping) lives in
-`runtime/engine.py`.
+queued. This module is the host-side half of that machinery — per-class
+bounded request queues plus a slot table with pluggable admission order;
+the device-side half (per-slot refill, masked stepping, slot
+snapshot/restore) lives in `runtime/engine.py`.
+
+Priority classes (the SLO layer):
+
+* every request carries a class — ``latency`` (interactive, jumps the
+  queue), ``throughput`` (bulk), or ``best_effort`` (sheddable) — and an
+  optional ``deadline_s`` used for SLO accounting;
+* admission orders by *effective* priority: class rank minus an
+  anti-starvation aging boost (one rank per ``aging_rounds`` admission
+  rounds waited), so a best-effort request that has waited long enough
+  eventually outranks fresh latency traffic — no class starves;
+* overload shedding: when the total queue depth crosses
+  ``shed_watermark``, the newest queued *best-effort* requests are failed
+  with reason ``"shed"`` until the depth is back at the watermark.
+  Latency and throughput work is never shed — they get per-class
+  `QueueFull` backpressure instead.
 
 Invariants the scheduler maintains (property-tested in
 tests/test_scheduler.py):
 
 * a slot is assigned to at most one running request at a time;
-* a request is admitted at most once, and only from the queue;
-* FIFO admission preserves submit order ("longest_prefix" reorders by
-  prompt length — longest first — with submit order as the tie-break);
+* a request is admitted only from a queue, and at most once per queue
+  residence (preemption legitimately requeues and re-admits);
+* same-class FIFO admission preserves submit order ("longest_prefix"
+  reorders by prompt length within a priority rank — longest first —
+  with submit order as the tie-break);
+* at equal age, a latency request is never admitted behind a throughput
+  request, and throughput never behind best-effort;
+* shedding only ever fails best-effort requests;
 * cancelling a queued request removes it; cancelling a running request
   marks it for harvest so the driver frees the slot at the next chunk
   boundary;
-* `submit` applies backpressure: a bounded queue raises `QueueFull`
-  instead of growing without limit.
+* `submit` applies backpressure: a bounded per-class queue raises
+  `QueueFull` instead of growing without limit;
+* a quarantined slot (the driver's fault response to a dead device row)
+  is never assigned again — the pool degrades instead of crashing.
 """
 
 from __future__ import annotations
@@ -28,7 +50,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Iterator
+from typing import Any, Iterator
 
 import numpy as np
 
@@ -36,12 +58,35 @@ QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
 CANCELLED = "cancelled"
+FAILED = "failed"
 
 ADMISSION_POLICIES = ("fifo", "longest_prefix")
+
+CLASSES = ("latency", "throughput", "best_effort")
+CLASS_RANK = {k: i for i, k in enumerate(CLASSES)}
+
+# typed failure reasons carried by RequestFailed
+REASON_CANCELLED = "cancelled"
+REASON_SHED = "shed"
+REASON_RETRIES = "retries_exhausted"
 
 
 class QueueFull(RuntimeError):
     """The session's bounded request queue is at capacity (backpressure)."""
+
+
+class RequestFailed(RuntimeError):
+    """`result()` on a request that did not complete: carries the typed
+    `reason` ("cancelled" | "shed" | "retries_exhausted") and whatever
+    tokens were emitted before the failure (`partial_tokens`)."""
+
+    def __init__(self, rid: int, reason: str, partial_tokens=None):
+        super().__init__(f"request {rid} failed: {reason}")
+        self.rid = rid
+        self.reason = reason
+        self.partial_tokens = (np.asarray([], np.int32)
+                               if partial_tokens is None
+                               else np.asarray(partial_tokens, np.int32))
 
 
 @dataclasses.dataclass
@@ -51,6 +96,8 @@ class Request:
     rid: int
     prompt: np.ndarray                      # (P,) int32, P >= 1
     max_new: int
+    klass: str = "latency"
+    deadline_s: float | None = None
     submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
     state: str = QUEUED
     slot: int | None = None
@@ -59,10 +106,24 @@ class Request:
     first_token_at: float | None = None
     finished_at: float | None = None
     hit_eos: bool = False
+    fail_reason: str | None = None
+    wait_rounds: int = 0                    # admission rounds spent queued
+    retries: int = 0                        # fault-recovery restarts
+    preemptions: int = 0                    # times checkpointed + requeued
+    not_before: float = 0.0                 # retry backoff gate (perf_counter)
+    snapshot: Any = None                    # preempted slot state (resume)
 
     @property
     def emitted(self) -> int:
         return len(self.tokens)
+
+    @property
+    def rank(self) -> int:
+        return CLASS_RANK[self.klass]
+
+    def effective_rank(self, aging_rounds: int) -> int:
+        """Class rank minus the anti-starvation aging boost."""
+        return self.rank - self.wait_rounds // aging_rounds
 
 
 class RequestHandle:
@@ -80,12 +141,34 @@ class RequestHandle:
         return self._req.state
 
     @property
+    def klass(self) -> str:
+        return self._req.klass
+
+    @property
+    def deadline_s(self) -> float | None:
+        return self._req.deadline_s
+
+    @property
     def done(self) -> bool:
-        return self._req.state in (DONE, CANCELLED)
+        return self._req.state in (DONE, CANCELLED, FAILED)
+
+    @property
+    def ok(self) -> bool:
+        return self._req.state == DONE
 
     @property
     def cancelled(self) -> bool:
         return self._req.state == CANCELLED
+
+    @property
+    def failed(self) -> bool:
+        return self._req.state == FAILED
+
+    @property
+    def fail_reason(self) -> str | None:
+        r = self._req
+        return (REASON_CANCELLED if r.state == CANCELLED
+                else r.fail_reason if r.state == FAILED else None)
 
     @property
     def tokens(self) -> np.ndarray:
@@ -97,9 +180,15 @@ class RequestHandle:
         return self._req.hit_eos
 
     def result(self) -> np.ndarray:
+        """Completed tokens. Raises `RequestFailed` (typed reason, partial
+        tokens attached) for a cancelled/shed/retries-exhausted request —
+        a failure is never indistinguishable from success."""
         if not self.done:
             raise RuntimeError(f"request {self.id} is still {self.state}; "
                                f"drain() or poll() the session first")
+        reason = self.fail_reason
+        if reason is not None:
+            raise RequestFailed(self.id, reason, self._req.tokens)
         return self.tokens
 
     @property
@@ -116,20 +205,34 @@ class RequestHandle:
             return None
         return r.finished_at - r.submitted_at
 
+    @property
+    def missed_deadline(self) -> bool:
+        r = self._req
+        return (r.deadline_s is not None and r.finished_at is not None
+                and (r.finished_at - r.submitted_at) > r.deadline_s)
+
     def __repr__(self) -> str:
         return (f"RequestHandle(id={self.id}, state={self.state}, "
-                f"emitted={self._req.emitted})")
+                f"klass={self.klass}, emitted={self._req.emitted})")
 
 
 class SlotScheduler:
-    """Bounded request queue + slot table with pluggable admission order.
+    """Per-class bounded request queues + slot table with class-aware,
+    aging-boosted admission.
 
     Pure host-side bookkeeping: it never touches device buffers, so the
     policy is unit-testable independent of the compiled session cell.
+
+    `max_queue` bounds each class queue (QueueFull past it);
+    `shed_watermark` bounds the *total* queue depth by failing the newest
+    best-effort requests (reason "shed"); `aging_rounds` is the
+    anti-starvation knob — every `aging_rounds` admission rounds a queued
+    request waits, its effective priority rises one class rank.
     """
 
     def __init__(self, n_slots: int, *, max_queue: int | None = None,
-                 policy: str = "fifo"):
+                 policy: str = "fifo", shed_watermark: int | None = None,
+                 aging_rounds: int = 8):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if policy not in ADMISSION_POLICIES:
@@ -137,37 +240,90 @@ class SlotScheduler:
                              f"expected one of {ADMISSION_POLICIES}")
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if shed_watermark is not None and shed_watermark < 1:
+            raise ValueError(f"shed_watermark must be >= 1, "
+                             f"got {shed_watermark}")
+        if aging_rounds < 1:
+            raise ValueError(f"aging_rounds must be >= 1, got {aging_rounds}")
         self.n_slots = n_slots
         self.max_queue = max_queue
         self.policy = policy
-        self._queue: deque[Request] = deque()
+        self.shed_watermark = shed_watermark
+        self.aging_rounds = aging_rounds
+        self._queues: dict[str, deque[Request]] = {k: deque() for k in CLASSES}
         self._slots: list[Request | None] = [None] * n_slots
+        self._quarantined: set[int] = set()
         self._next_rid = 0
         # rids in admission order — bounded: a session admits without limit
         self.admitted_order: deque[int] = deque(maxlen=4096)
         self.queue_peak = 0
+        self.shed_count: dict[str, int] = {k: 0 for k in CLASSES}
+        # requests shed since the driver last drained them (pop_shed):
+        # shedding happens inside submit(), so the session discovers the
+        # victims here rather than by scanning its handle table
+        self._shed_log: list[Request] = []
 
     # -- queue -----------------------------------------------------------
-    def submit(self, prompt, max_new: int) -> Request:
-        if self.max_queue is not None and len(self._queue) >= self.max_queue:
-            raise QueueFull(f"request queue is at capacity "
+    def submit(self, prompt, max_new: int, *, klass: str = "latency",
+               deadline_s: float | None = None) -> Request:
+        if klass not in CLASSES:
+            raise ValueError(f"unknown class {klass!r}; "
+                             f"expected one of {CLASSES}")
+        q = self._queues[klass]
+        if self.max_queue is not None and len(q) >= self.max_queue:
+            raise QueueFull(f"the {klass} queue is at capacity "
                             f"({self.max_queue}); drain or poll first")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("prompt must hold at least one token")
         if max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {max_new}")
-        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new)
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
+                      klass=klass, deadline_s=deadline_s)
         self._next_rid += 1
-        self._queue.append(req)
-        self.queue_peak = max(self.queue_peak, len(self._queue))
+        q.append(req)
+        self.queue_peak = max(self.queue_peak, self.queued)
+        self.shed_overflow()
         return req
+
+    def shed_overflow(self) -> list[Request]:
+        """Overload protection: while the total queue depth exceeds the
+        watermark, fail the newest queued best-effort requests with reason
+        "shed". Latency/throughput work is never shed. Returns the shed
+        requests (so the driver can surface events)."""
+        shed: list[Request] = []
+        if self.shed_watermark is None:
+            return shed
+        be = self._queues["best_effort"]
+        while self.queued > self.shed_watermark and be:
+            req = be[-1]                       # newest best-effort first
+            self.fail(req, REASON_SHED)        # fail() dequeues it
+            shed.append(req)
+        self._shed_log.extend(shed)
+        return shed
+
+    def pop_shed(self) -> list[Request]:
+        """Requests shed since the last call (driver event/stats hook)."""
+        out, self._shed_log = self._shed_log, []
+        return out
+
+    def fail(self, req: Request, reason: str) -> None:
+        """Terminal failure (shed / retries exhausted). Queued requests are
+        dequeued; the caller releases the slot of a running one."""
+        if req.state == QUEUED:
+            self._queues[req.klass].remove(req)
+        req.state = FAILED
+        req.fail_reason = reason
+        req.finished_at = time.perf_counter()
+        self.shed_count[req.klass] += (reason == REASON_SHED)
 
     def cancel(self, req: Request) -> bool:
         """Queued -> removed now; running -> marked (the driver frees the
         slot at the next chunk boundary). Returns False if already over."""
         if req.state == QUEUED:
-            self._queue.remove(req)
+            self._queues[req.klass].remove(req)
             req.state = CANCELLED
             req.finished_at = time.perf_counter()
             return True
@@ -177,32 +333,76 @@ class SlotScheduler:
             return True
         return False
 
+    def requeue(self, req: Request, *, front: bool = True,
+                backoff_s: float = 0.0) -> None:
+        """Put a released (preempted or fault-recovered) request back in
+        its class queue — at the front by default, so a preempted request
+        resumes as soon as its class gets a slot. `backoff_s` gates
+        re-admission (fault retries back off; preemption resumes use 0)."""
+        assert req.slot is None, "requeue before release"
+        req.state = QUEUED
+        req.not_before = (time.perf_counter() + backoff_s if backoff_s > 0
+                          else 0.0)
+        q = self._queues[req.klass]
+        if front:
+            q.appendleft(req)
+        else:
+            q.append(req)
+        self.queue_peak = max(self.queue_peak, self.queued)
+
     # -- slot table ------------------------------------------------------
     def free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self._slots) if r is None]
+        return [i for i, r in enumerate(self._slots)
+                if r is None and i not in self._quarantined]
 
-    def admit(self) -> list[tuple[int, Request]]:
-        """Assign queued requests to free slots per the admission policy.
-        Returns [(slot, request)] for this round, already marked RUNNING."""
-        free = self.free_slots()
-        if not free or not self._queue:
-            return []
+    def quarantine(self, slot: int) -> None:
+        """Permanently retire a slot (dead device row): it is never
+        admitted into again — the pool degrades instead of crashing."""
+        assert self._slots[slot] is None, "quarantine of an occupied slot"
+        self._quarantined.add(slot)
+
+    @property
+    def quarantined(self) -> list[int]:
+        return sorted(self._quarantined)
+
+    @property
+    def usable_slots(self) -> int:
+        return self.n_slots - len(self._quarantined)
+
+    def _admission_key(self, req: Request):
+        rank = req.effective_rank(self.aging_rounds)
         if self.policy == "longest_prefix":
-            # longest prompt first: long prefills start earliest so their
-            # extra slot-steps overlap the short requests' turnover
-            order = sorted(self._queue,
-                           key=lambda r: (-r.prompt.size, r.rid))
-        else:
-            order = list(self._queue)
+            # longest prompt first within a rank: long prefills start
+            # earliest so their extra slot-steps overlap short turnover
+            return (rank, -req.prompt.size, req.rid)
+        return (rank, req.rid)
+
+    def admit(self, now: float | None = None) -> list[tuple[int, Request]]:
+        """Assign queued requests to free slots: effective-priority order
+        (class rank minus aging boost), FIFO within a rank. Requests whose
+        retry backoff gate (`not_before`) is still in the future are
+        skipped this round. Returns [(slot, request)], already RUNNING."""
+        free = self.free_slots()
+        if not self.queued:
+            return []
+        now = time.perf_counter() if now is None else now
+        for q in self._queues.values():        # aging: everyone waits a round
+            for req in q:
+                req.wait_rounds += 1
+        if not free:
+            return []
+        ready = [r for q in self._queues.values() for r in q
+                 if r.not_before <= now]
+        order = sorted(ready, key=self._admission_key)
         out = []
         for slot, req in zip(free, order):
             assert self._slots[slot] is None, "slot double-assignment"
             assert req.state == QUEUED, "re-admission of a running request"
-            self._queue.remove(req)
+            self._queues[req.klass].remove(req)
             self._slots[slot] = req
             req.state = RUNNING
             req.slot = slot
-            req.started_at = time.perf_counter()
+            req.started_at = now
             self.admitted_order.append(req.rid)
             out.append((slot, req))
         return out
@@ -213,10 +413,32 @@ class SlotScheduler:
         self._slots[slot] = None
         req.slot = None
 
+    def preempt_victim(self, for_rank: int = 0) -> tuple[int, Request] | None:
+        """The running request a queued rank-`for_rank` request should
+        displace: strictly lower priority (higher rank) than the claimant,
+        preferring the lowest class and, within it, the most recently
+        started (least sunk work lost). None when nothing qualifies."""
+        victims = [(s, r) for s, r in self.running_requests()
+                   if r.state == RUNNING and r.rank > for_rank]
+        if not victims:
+            return None
+        # rid breaks started_at ties (same-round admissions share a
+        # timestamp): the later submission has the least sunk work
+        return max(victims, key=lambda sr: (sr[1].rank,
+                                            sr[1].started_at or 0.0,
+                                            sr[1].rid))
+
     # -- views -----------------------------------------------------------
     @property
     def queued(self) -> int:
-        return len(self._queue)
+        return sum(len(q) for q in self._queues.values())
+
+    def queued_by_class(self) -> dict[str, int]:
+        return {k: len(q) for k, q in self._queues.items()}
+
+    def queued_requests(self) -> Iterator[Request]:
+        for k in CLASSES:
+            yield from self._queues[k]
 
     @property
     def running(self) -> int:
@@ -229,4 +451,4 @@ class SlotScheduler:
 
     @property
     def busy(self) -> bool:
-        return bool(self._queue) or self.running > 0
+        return self.queued > 0 or self.running > 0

@@ -15,10 +15,12 @@ refill) and the host syncs once per K tokens.
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from typing import Callable, Iterator
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -46,9 +48,12 @@ def chunked_latency_stats(samples) -> dict:
             "p99_ms": float(np.percentile(per_tok, 99) * 1e3),
             "tokens_per_s_per_slot": float(tokens / max(lat.sum(), 1e-9))}
 
-from repro.runtime.engine import DecodeEngine, StallClock
-from repro.runtime.scheduler import (DONE, QUEUED, RUNNING, RequestHandle,
-                                     SlotScheduler)
+from repro.runtime.engine import (DecodeEngine, StallClock, make_nan_scan,
+                                  make_slot_corrupt, make_slot_restore,
+                                  make_slot_snapshot)
+from repro.runtime.faults import FaultPlan, SessionWedged
+from repro.runtime.scheduler import (CLASSES, DONE, QUEUED, REASON_RETRIES,
+                                     RUNNING, RequestHandle, SlotScheduler)
 
 
 class ServeLoop:
@@ -181,13 +186,30 @@ class ServeLoop:
 # ----------------------------------------------------------------------------
 
 
+def _class_counters() -> dict:
+    return {"submitted": 0, "done": 0, "cancelled": 0, "failed": 0,
+            "shed": 0, "preempted": 0, "retries": 0, "deadline_miss": 0,
+            "ttfts": deque(maxlen=HISTORY), "lats": deque(maxlen=HISTORY)}
+
+
+_NO_TOKENS = None    # lazily-built empty (0,) int32 event payload
+
+
+def _no_tokens() -> np.ndarray:
+    global _NO_TOKENS
+    if _NO_TOKENS is None:
+        _NO_TOKENS = np.empty(0, np.int32)
+    return _NO_TOKENS
+
+
 class ServeSession:
     """A long-lived slot pool serving a stream of independent requests.
 
     ::
 
         sess = cluster.compile(ServeSessionProgram(slots=8)).open()
-        h = sess.submit(prompt, max_new=64)        # -> RequestHandle
+        h = sess.submit(prompt, max_new=64, klass="latency",
+                        deadline_s=0.5)            # -> RequestHandle
         for handle, toks, done in sess.stream():   # incremental tokens
             ...
         sess.drain()                               # run queue dry
@@ -200,13 +222,52 @@ class ServeSession:
     once per chunk: harvest emitted tokens, free finished slots, admit
     queued requests, dispatch the next chunk. Both programs donate the
     pool state, so steady-state serving allocates nothing.
+
+    Robustness layer (the MemPool stance — one stalled PE never wedges
+    the cluster, a dead PE only costs its own lanes):
+
+    * **priority classes** — requests carry ``klass`` ("latency" |
+      "throughput" | "best_effort") and an optional ``deadline_s``;
+      admission is class-ranked with anti-starvation aging, overload
+      sheds only best-effort work (see `SlotScheduler`);
+    * **preemption** — a ready latency request queued behind a full pool
+      checkpoints the lowest-priority running slot (`snapshot_fn`),
+      requeues it at the front of its class, and takes the slot; the
+      victim resumes bit-identically (`restore_fn`) as soon as capacity
+      frees. Progress is guaranteed: preemption only happens at chunk
+      boundaries, so a resumed victim always decodes at least one full
+      chunk before it can be preempted again;
+    * **fault detection + recovery** — an optional NaN sentinel scan
+      (`nan_check`) and a `FaultPlan` (`faults=`) feed a recovery path
+      that quarantines dead slots (the pool degrades, never crashes),
+      discards poisoned partial output, and requeues the victim with
+      bounded retries + exponential backoff;
+    * **watchdog** — `poll(timeout_s=...)` (or the session-wide
+      ``watchdog_s``) bounds every device wait on a watchdog thread and
+      raises `SessionWedged` (StallClock ledger attached) instead of
+      blocking forever; `recover_wedged()` rebuilds the pool via
+      ``state_factory`` and requeues everything that was running;
+    * **per-class SLO accounting** — TTFT/latency percentiles,
+      deadline misses, preemptions, retries and sheds per class in
+      `stats()["classes"]`.
     """
 
     def __init__(self, chunk_fn: Callable, refill_fn: Callable, params,
                  state: dict, *, n_slots: int, chunk: int,
                  max_prompt: int, max_seq: int | None = None,
                  eos_id: int | None = None, max_queue: int | None = None,
-                 admission: str = "fifo"):
+                 admission: str = "fifo",
+                 shed_watermark: int | None = None, aging_rounds: int = 8,
+                 preempt: bool = True,
+                 snapshot_fn: Callable | None = None,
+                 restore_fn: Callable | None = None,
+                 nan_scan_fn: Callable | None = None,
+                 corrupt_fn: Callable | None = None,
+                 state_factory: Callable | None = None,
+                 watchdog_s: float | None = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.05,
+                 nan_check: bool = False,
+                 faults: "FaultPlan | None" = None):
         self._chunk_fn = chunk_fn
         self._refill_fn = refill_fn
         self.params = params
@@ -216,9 +277,27 @@ class ServeSession:
         self.max_prompt = max_prompt
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.preempt = preempt
+        self.watchdog_s = watchdog_s
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         self.scheduler = SlotScheduler(n_slots, max_queue=max_queue,
-                                       policy=admission)
+                                       policy=admission,
+                                       shed_watermark=shed_watermark,
+                                       aging_rounds=aging_rounds)
         self.clock = StallClock()
+        # checkpoint/restore + fault machinery; the engine defaults cover
+        # flat (batch-axis-0) caches, model caches pass steps.py helpers
+        self._snapshot_fn = snapshot_fn
+        self._restore_fn = restore_fn
+        self._nan_scan_fn = nan_scan_fn
+        self._corrupt_fn = corrupt_fn
+        self._state_factory = state_factory
+        self._nan_check = nan_check
+        self._faults = faults
+        self._wedged = False
+        self._chunk_index = 0
+        self._refill_failures = 0
         # bounded histories: a session lives for an open-ended request
         # stream, so per-chunk and per-request records keep a sliding
         # window (percentiles cover the recent window; totals are counters)
@@ -226,6 +305,10 @@ class ServeSession:
             maxlen=HISTORY)
         self.handles: dict[int, RequestHandle] = {}    # in-flight only
         self._pending_release: set[int] = set()
+        # host table freed but device row still active (preempted / dead
+        # slots): folded into the next refill's release mask
+        self._pending_deactivate: set[int] = set()
+        self._pending_events: list = []     # terminal events awaiting poll
         self._busy_steps = 0
         self._total_steps = 0
         self._emitted_total = 0
@@ -234,11 +317,48 @@ class ServeSession:
         self._latencies: deque[float] = deque(maxlen=HISTORY)
         self._n_done = 0
         self._n_cancelled = 0
+        self._n_failed = 0
+        self._n_preemptions = 0
+        self._n_retries = 0
+        self._deadline_miss = 0
+        self._class_stats = {k: _class_counters() for k in CLASSES}
+
+    # -- lazily-built fault/checkpoint programs ---------------------------
+    def _get_snapshot_fn(self) -> Callable:
+        if self._snapshot_fn is None:
+            self._snapshot_fn = make_slot_snapshot()
+        return self._snapshot_fn
+
+    def _get_restore_fn(self) -> Callable:
+        if self._restore_fn is None:
+            self._restore_fn = make_slot_restore()
+        return self._restore_fn
+
+    def _get_nan_scan_fn(self) -> Callable:
+        if self._nan_scan_fn is None:
+            self._nan_scan_fn = make_nan_scan()
+        return self._nan_scan_fn
+
+    def _get_corrupt_fn(self) -> Callable:
+        if self._corrupt_fn is None:
+            self._corrupt_fn = make_slot_corrupt()
+        return self._corrupt_fn
+
+    def attach_faults(self, plan: FaultPlan) -> None:
+        """Arm a `FaultPlan` against this session (chaos testing)."""
+        self._faults = plan
 
     # -- request lifecycle ----------------------------------------------
-    def submit(self, prompt, max_new: int) -> RequestHandle:
+    def submit(self, prompt, max_new: int, *, klass: str = "latency",
+               deadline_s: float | None = None) -> RequestHandle:
         """Enqueue one request; admitted to a slot at a chunk boundary.
-        Raises `scheduler.QueueFull` when the bounded queue is at capacity.
+
+        `klass` picks the priority class; `deadline_s` (optional) is the
+        SLO deadline counted from now, used for per-class deadline-miss
+        accounting. Raises `scheduler.QueueFull` when the class queue is
+        at capacity. Under overload (`shed_watermark`) a best-effort
+        submission may come back already failed with reason "shed" —
+        check `handle.failed` or let `result()` raise `RequestFailed`.
         """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size > self.max_prompt:
@@ -252,9 +372,13 @@ class ServeSession:
                 and prompt.size + max_new - 1 > self.max_seq):
             raise ValueError(f"prompt ({prompt.size}) + max_new ({max_new}) "
                              f"exceeds the session's max_seq={self.max_seq}")
-        req = self.scheduler.submit(prompt, max_new)
+        req = self.scheduler.submit(prompt, max_new, klass=klass,
+                                    deadline_s=deadline_s)
+        self._class_stats[klass]["submitted"] += 1
         handle = RequestHandle(req)
-        self.handles[req.rid] = handle
+        if not handle.done:             # the submission itself may have
+            self.handles[req.rid] = handle      # been shed under overload
+        self._retire_shed(self._pending_events)
         return handle
 
     def cancel(self, handle: RequestHandle) -> bool:
@@ -264,47 +388,255 @@ class ServeSession:
         ok = self.scheduler.cancel(handle._req)
         if ok:
             self._n_cancelled += 1
+            self._class_stats[handle.klass]["cancelled"] += 1
             if was_queued:                  # terminal now; running requests
                 self.handles.pop(handle.id, None)   # retire at the boundary
         return ok
 
     # -- the chunk boundary ---------------------------------------------
-    def _admit_and_refill(self) -> None:
-        release = np.zeros(self.n_slots, bool)
+    def _retire_shed(self, events: list) -> None:
+        """Surface requests the scheduler shed under overload as terminal
+        events (empty payload, done=True) and count them per class."""
+        for req in self.scheduler.pop_shed():
+            self._class_stats[req.klass]["shed"] += 1
+            handle = self.handles.pop(req.rid, None)
+            if handle is not None:
+                events.append((handle, _no_tokens(), True))
+
+    def _fail_request(self, req, reason: str, events: list) -> None:
+        self.scheduler.fail(req, reason)
+        self._class_stats[req.klass]["failed"] += 1
+        self._n_failed += 1
+        handle = self.handles.pop(req.rid, None)
+        if handle is not None:
+            events.append((handle, _no_tokens(), True))
+
+    def _restart_request(self, req, events: list) -> None:
+        """Fault recovery for a running request whose slot died: discard
+        the poisoned partial output (greedy decode is deterministic, so a
+        restart reproduces it bit-identically) and requeue with bounded
+        retries + exponential backoff; past `max_retries` the request
+        fails terminally with reason "retries_exhausted"."""
+        req.tokens.clear()
+        req.hit_eos = False
+        req.snapshot = None
+        req.retries += 1
+        if req.retries > self.max_retries:
+            self._fail_request(req, REASON_RETRIES, events)
+            return
+        self._class_stats[req.klass]["retries"] += 1
+        self._n_retries += 1
+        backoff = self.retry_backoff_s * (2 ** (req.retries - 1))
+        self.scheduler.requeue(req, front=False, backoff_s=backoff)
+
+    def _recover_slot(self, slot: int, quarantine: bool,
+                      events: list) -> None:
+        """A device row was detected dead (kill fault) or poisoned (NaN
+        scan) at harvest: free it before any of its output is surfaced.
+        `quarantine=True` retires the slot for good (pool degrades);
+        False recycles it (the refill zeroes the rows)."""
+        req = self.scheduler._slots[slot]
+        if req is not None:
+            self.scheduler.release(slot)
+        self._pending_deactivate.add(slot)
+        if quarantine:
+            self.scheduler.quarantine(slot)
+        if req is None:
+            return
+        if req.state == RUNNING:
+            self._restart_request(req, events)
+        else:                               # cancelled mid-flight: retire
+            self.handles.pop(req.rid, None)
+
+    def _preempt_for_latency(self) -> None:
+        """Checkpoint lowest-priority running slots so that ready latency
+        requests stuck behind a full pool get in this boundary. The victim
+        is snapshotted (bit-exact slot state incl. cache rows), requeued
+        at the front of its class with its aging reset, and resumes via
+        `restore_fn` as soon as capacity frees."""
+        now = time.perf_counter()
+        ready_lat = [r for r in self.scheduler._queues["latency"]
+                     if r.not_before <= now]
+        if not ready_lat:
+            return
+        need = len(ready_lat) - len(self.scheduler.free_slots())
+        snapshot = None
+        for _ in range(max(need, 0)):
+            victim = self.scheduler.preempt_victim(for_rank=0)
+            if victim is None:
+                break
+            slot, req = victim
+            snapshot = snapshot or self._get_snapshot_fn()
+            req.snapshot = jax.device_get(
+                snapshot(self.state, np.int32(slot)))
+            req.preemptions += 1
+            req.wait_rounds = 0     # resume on capacity, not aging boost
+            self._class_stats[req.klass]["preempted"] += 1
+            self._n_preemptions += 1
+            self.scheduler.release(slot)
+            self._pending_deactivate.add(slot)
+            self.scheduler.requeue(req, front=True)
+
+    def _admit_and_refill(self, events: list) -> None:
         for slot, req in list(self.scheduler.running_requests()):
             if req.state != RUNNING:            # cancelled mid-flight
                 self._pending_release.add(slot)
                 self.handles.pop(req.rid, None)     # retired
         for slot in self._pending_release:
             self.scheduler.release(slot)
-            release[slot] = True
+            self._pending_deactivate.add(slot)
         self._pending_release.clear()
+        self._retire_shed(events)       # sheds triggered since last poll
+        if self.preempt:
+            self._preempt_for_latency()
         admits = self.scheduler.admit()
-        if not admits and not release.any():
+        if not admits and not self._pending_deactivate:
             return
-        admit = np.zeros(self.n_slots, bool)
-        pbuf = np.zeros((self.n_slots, self.max_prompt), np.int32)
-        plen = np.zeros(self.n_slots, np.int32)
-        budget = np.zeros(self.n_slots, np.int32)
-        for slot, req in admits:
-            admit[slot] = True
-            pbuf[slot, :req.prompt.size] = req.prompt
-            plen[slot] = req.prompt.size
-            budget[slot] = req.max_new
-        self.state = self._refill_fn(self.state, admit, release, pbuf,
-                                     plen, budget)
+        release = np.zeros(self.n_slots, bool)
+        if self._pending_deactivate:
+            release[sorted(self._pending_deactivate)] = True
+        fresh = [(s, r) for s, r in admits if r.snapshot is None]
+        resumed = [(s, r) for s, r in admits if r.snapshot is not None]
+        try:
+            if self._faults is not None:
+                self._faults.check_refill(self._chunk_index)
+            if fresh or release.any():
+                admit = np.zeros(self.n_slots, bool)
+                pbuf = np.zeros((self.n_slots, self.max_prompt), np.int32)
+                plen = np.zeros(self.n_slots, np.int32)
+                budget = np.zeros(self.n_slots, np.int32)
+                for slot, req in fresh:
+                    admit[slot] = True
+                    pbuf[slot, :req.prompt.size] = req.prompt
+                    plen[slot] = req.prompt.size
+                    budget[slot] = req.max_new
+                self.state = self._refill_fn(self.state, admit, release,
+                                             pbuf, plen, budget)
+            for slot, req in resumed:
+                self.state = self._get_restore_fn()(
+                    self.state, np.int32(slot), req.snapshot)
+                req.snapshot = None
+            self._pending_deactivate.clear()
+            self._refill_failures = 0
+        except Exception:
+            # un-admit the round (reverse order restores queue positions);
+            # pending deactivations retry at the next boundary. Bounded:
+            # persistent refill failure must surface, not spin forever.
+            for slot, req in reversed(admits):
+                self.scheduler.release(slot)
+                self.scheduler.requeue(req, front=True)
+            self._refill_failures += 1
+            if self._refill_failures > self.max_retries:
+                raise
 
-    def poll(self) -> list[tuple[RequestHandle, np.ndarray, bool]]:
+    def _watchdog_wait(self, arrays, timeout: float, chunk_idx: int,
+                       wedge: bool) -> None:
+        """Bound the device wait: block_until_ready runs on a watchdog
+        thread while the driver waits at most `timeout` seconds. An
+        injected wedge simply never finishes the wait — exactly what a
+        hung device looks like from the host."""
+        t0 = time.perf_counter()
+        finished = threading.Event()
+        errs: list[BaseException] = []
+        if not wedge:
+            def _wait():
+                try:
+                    jax.block_until_ready(arrays)
+                except Exception as e:      # surfaced on the driver thread
+                    errs.append(e)
+                finished.set()
+            threading.Thread(target=_wait, daemon=True).start()
+        if not finished.wait(timeout):
+            self._wedged = True
+            raise SessionWedged(chunk_idx, timeout, self.clock.report())
+        if errs:
+            raise errs[0]
+        self.clock.sync_done(t0)
+
+    def _handle_idle_queue(self, events: list) -> None:
+        """Nothing running but work queued: either the pool is fully
+        quarantined (fail everything — it can never run) or every queued
+        request is gated by retry backoff (sleep to the earliest gate and
+        re-admit, so drain() cannot livelock)."""
+        if not self.scheduler.queued:
+            return
+        if self.scheduler.usable_slots == 0:
+            for req in list(self.scheduler.queued_requests()):
+                self._fail_request(req, REASON_RETRIES, events)
+            return
+        gates = [r.not_before for r in self.scheduler.queued_requests()]
+        wait = min(gates) - time.perf_counter()
+        if wait > 0:
+            time.sleep(min(wait, 0.25))
+        self._admit_and_refill(events)
+
+    def recover_wedged(self) -> None:
+        """Recover from `SessionWedged`: rebuild the pool state from
+        ``state_factory`` (the wedged buffers are unrecoverable — their
+        program never completed), requeue every running request with a
+        retry charged, and clear the wedge latch. Requests past
+        `max_retries` fail terminally; their events surface on the next
+        poll."""
+        if self._state_factory is None:
+            raise RuntimeError("recover_wedged() needs a state_factory "
+                               "(a zero-arg callable rebuilding the pool "
+                               "state); pass it to the session or open() "
+                               "the program with one")
+        events = self._pending_events
+        for slot, req in list(self.scheduler.running_requests()):
+            self.scheduler.release(slot)
+            if req.state == RUNNING:
+                self._restart_request(req, events)
+            else:
+                self.handles.pop(req.rid, None)
+        self._pending_release.clear()
+        self._pending_deactivate.clear()
+        self.state = self._state_factory()
+        self._wedged = False
+
+    def poll(self, timeout_s: float | None = None
+             ) -> list[tuple[RequestHandle, np.ndarray, bool]]:
         """Advance the session by one chunk. Returns the chunk's events:
-        `(handle, new_tokens, done)` per request that emitted or finished.
-        A no-op (empty list) when no request is queued or running."""
-        self._admit_and_refill()
+        `(handle, new_tokens, done)` per request that emitted or finished
+        (failed/shed requests surface as `(handle, empty, True)`).
+        A no-op (empty list) when no request is queued or running.
+
+        `timeout_s` (or the session-wide ``watchdog_s``) bounds the
+        device wait: past it, `SessionWedged` is raised instead of
+        blocking forever, and the session refuses further polls until
+        `recover_wedged()`."""
+        if self._wedged:
+            raise RuntimeError("session is wedged; call recover_wedged() "
+                               "before polling again")
+        events, self._pending_events = self._pending_events, []
+        self._admit_and_refill(events)
         if self.scheduler.running == 0:
-            return []
+            self._handle_idle_queue(events)
+            if self.scheduler.running == 0:
+                return events
+        chunk_idx = self._chunk_index
+        timeout = timeout_s if timeout_s is not None else self.watchdog_s
+        if (timeout is None and self._faults is not None
+                and self._faults.pending_wedge):
+            raise RuntimeError("a wedge fault is scripted but nothing "
+                               "bounds the device wait: set watchdog_s "
+                               "or pass poll(timeout_s=...)")
+        if self._faults is not None:
+            corrupted = self._faults.corrupts(chunk_idx)
+            if corrupted:
+                mask = np.zeros(self.n_slots, bool)
+                mask[corrupted] = True
+                self.state = self._get_corrupt_fn()(self.state, mask)
         t0 = self.clock.dispatch()
         self.state, toks, emit, busy, _all_done = self._chunk_fn(
             self.params, self.state)
-        self.clock.sync(toks, emit, busy)
+        self._chunk_index += 1
+        wedge = self._faults is not None and self._faults.wedged(chunk_idx)
+        if timeout is None:
+            self.clock.sync(toks, emit, busy)
+        else:
+            self._watchdog_wait((toks, emit, busy), timeout, chunk_idx,
+                                wedge)
         dt = time.perf_counter() - t0
         toks, emit, busy = (np.asarray(toks), np.asarray(emit),
                             np.asarray(busy))
@@ -312,7 +644,20 @@ class ServeSession:
         self.chunk_latencies.append((dt, int(busy.max(initial=0))))
         self._total_steps += self.chunk
         self._busy_steps += int(busy.sum())
-        events = []
+        # fault detection runs before harvest, so a dead slot's tokens are
+        # never surfaced — detection frees the slot and requeues its work
+        if self._faults is not None:
+            for slot in self._faults.kills(chunk_idx):
+                self._recover_slot(slot, quarantine=True, events=events)
+        if self._nan_check or (self._faults is not None
+                               and self._faults.has_corruption):
+            flags = np.asarray(self._get_nan_scan_fn()(self.state))
+            if flags.any():
+                running = {s for s, _ in self.scheduler.running_requests()}
+                for slot in np.flatnonzero(flags):
+                    if int(slot) in running:
+                        self._recover_slot(int(slot), quarantine=False,
+                                           events=events)
         n_emitted = 0
         for slot, req in list(self.scheduler.running_requests()):
             new = toks[slot][emit[slot]]
@@ -320,6 +665,8 @@ class ServeSession:
                 if req.first_token_at is None:
                     req.first_token_at = now
                     self._ttfts.append(now - req.submitted_at)
+                    self._class_stats[req.klass]["ttfts"].append(
+                        now - req.submitted_at)
                 req.tokens.extend(int(t) for t in new)
                 n_emitted += new.size
                 if self.eos_id is not None and np.any(new == self.eos_id):
@@ -330,7 +677,14 @@ class ServeSession:
                 req.finished_at = now
                 self._pending_release.add(slot)
                 self._n_done += 1
-                self._latencies.append(now - req.submitted_at)
+                lat = now - req.submitted_at
+                self._latencies.append(lat)
+                cs = self._class_stats[req.klass]
+                cs["done"] += 1
+                cs["lats"].append(lat)
+                if req.deadline_s is not None and lat > req.deadline_s:
+                    cs["deadline_miss"] += 1
+                    self._deadline_miss += 1
             if new.size or done:
                 handle = self.handles.pop(req.rid) if done \
                     else self.handles[req.rid]      # retire done requests
@@ -339,15 +693,18 @@ class ServeSession:
         self._per_chunk_emitted.append(n_emitted)
         return events
 
-    def stream(self) -> Iterator[tuple[RequestHandle, np.ndarray, bool]]:
+    def stream(self, timeout_s: float | None = None
+               ) -> Iterator[tuple[RequestHandle, np.ndarray, bool]]:
         """Yield `(handle, new_tokens, done)` events until the queue and
-        every slot run dry. Submitting more work mid-stream extends it."""
-        while self.scheduler.busy:
-            yield from self.poll()
+        every slot run dry. Submitting more work mid-stream extends it.
+        `timeout_s` bounds each chunk's device wait (`SessionWedged`)."""
+        while self.scheduler.busy or self._pending_events:
+            yield from self.poll(timeout_s)
 
-    def drain(self) -> dict:
-        """Run until every submitted request completes; returns stats()."""
-        for _ in self.stream():
+    def drain(self, timeout_s: float | None = None) -> dict:
+        """Run until every submitted request completes; returns stats().
+        `timeout_s` bounds each chunk's device wait (`SessionWedged`)."""
+        for _ in self.stream(timeout_s):
             pass
         return self.stats()
 
@@ -372,9 +729,27 @@ class ServeSession:
                              if len(xs) else 0.0)
         ttfts, lats = list(self._ttfts), list(self._latencies)
         total = self.n_slots * self._total_steps
-        return {
+
+        def per_class(k: str) -> dict:
+            cs = self._class_stats[k]
+            return {
+                "submitted": cs["submitted"], "done": cs["done"],
+                "cancelled": cs["cancelled"], "failed": cs["failed"],
+                "shed": cs["shed"], "preempted": cs["preempted"],
+                "retries": cs["retries"],
+                "deadline_miss": cs["deadline_miss"],
+                "ttft_ms": {"p50": pct(cs["ttfts"], 50) * 1e3,
+                            "p99": pct(cs["ttfts"], 99) * 1e3},
+                "latency_ms": {"p50": pct(cs["lats"], 50) * 1e3,
+                               "p99": pct(cs["lats"], 99) * 1e3},
+            }
+
+        out = {
             "requests_done": self._n_done,
             "requests_cancelled": self._n_cancelled,
+            "requests_failed": self._n_failed,
+            "requests_shed": sum(cs["shed"]
+                                 for cs in self._class_stats.values()),
             "emitted_total": self._emitted_total,
             "tokens_per_s": tok_s,
             "occupancy_pct": 100.0 * self._busy_steps / max(total, 1),
@@ -382,9 +757,18 @@ class ServeSession:
                         "p99": pct(ttfts, 99) * 1e3},
             "latency_ms": {"p50": pct(lats, 50) * 1e3,
                            "p99": pct(lats, 99) * 1e3},
+            "preemptions": self._n_preemptions,
+            "retries": self._n_retries,
+            "deadline_miss": self._deadline_miss,
+            "classes": {k: per_class(k) for k in CLASSES},
+            "quarantined_slots": self.scheduler.quarantined,
+            "usable_slots": self.scheduler.usable_slots,
             "queue_peak": self.scheduler.queue_peak,
             "admitted_order": list(self.scheduler.admitted_order),
             "slots": self.n_slots,
             "chunk": self.chunk,
             "stall": self.clock.report(),
         }
+        if self._faults is not None:
+            out["faults"] = self._faults.summary()
+        return out

@@ -43,6 +43,28 @@ def test_checkpoint_async_and_gc(tmp_path):
     assert mgr.latest_step() == 4
 
 
+def test_checkpoint_async_write_failure_surfaces(tmp_path, monkeypatch):
+    """A failed background write must raise on wait() (once) and on the
+    next save() — a dropped checkpoint is never silent."""
+    mgr = CheckpointManager(tmp_path, async_save=True)
+
+    def boom(step, snapshot):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(mgr, "_write_step", boom)
+    mgr.save(1, small_state())
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    mgr.wait()                              # raised once, then cleared
+    mgr.save(2, small_state())              # fails in the background again
+    with pytest.raises(OSError, match="disk full"):
+        mgr.save(3, small_state())          # surfaced before the new write
+    monkeypatch.undo()
+    mgr.save(4, small_state())              # recovered: a real write lands
+    mgr.wait()
+    assert mgr.latest_step() == 4
+
+
 def test_checkpoint_atomicity(tmp_path):
     """A stale tmp dir must never be visible as a checkpoint."""
     mgr = CheckpointManager(tmp_path, async_save=False)

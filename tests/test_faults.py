@@ -1,0 +1,383 @@
+"""Fault injection + recovery: the session's robustness contract.
+
+MemPool's robustness claim is architectural — one stalled core never
+wedges the cluster, a dead core only costs its own lanes. The serving
+analogue under test here: a scripted `FaultPlan` (kill / NaN-corrupt /
+wedge / refill-error) fires against a live `ServeSession`, and every
+request that survives must produce tokens bit-identical to a fault-free
+run. Preemption rides the same checkpoint machinery, so its resume is
+pinned bit-exact too. The wedge path is the watchdog contract:
+`poll(timeout_s=...)` / `watchdog_s` raises `SessionWedged` instead of
+blocking forever, and `recover_wedged()` rebuilds the pool.
+
+The scripted decode emits the same row for every slot (tokens depend
+only on the request's position, never its slot), so kill-restarts,
+preempt-resumes, and wedge-rebuilds that land work in different slots
+still have one right answer to compare against.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.cluster import Cluster, ServeSessionProgram
+from repro.runtime import engine
+from repro.runtime.faults import (Fault, FaultPlan, InjectedFault,
+                                  SessionWedged)
+from repro.runtime.scheduler import RequestFailed
+from repro.runtime.serve_loop import ServeSession
+from test_serve_session import scripted_step
+
+
+# ----------------------------------------------------------------------------
+# Scripted harness: slot-uniform token rows + a rebuildable pool
+# ----------------------------------------------------------------------------
+
+
+BASE = np.array([3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8], np.int32)
+
+
+def make_chaos_session(*, n_slots=3, chunk=2, eos_id=None, max_prompt=4,
+                       **kw):
+    """A ServeSession over the slot-uniform script, with a state_factory
+    so wedge recovery can rebuild the pool."""
+    script = np.tile(BASE[:, None], (1, n_slots))
+    chunk_fn = engine.make_session_chunk(scripted_step(script), chunk,
+                                         eos_id=eos_id)
+    refill_fn = engine.make_session_refill()
+
+    def factory():
+        return engine.init_session_state(
+            {"kv": jnp.zeros((n_slots, 4), jnp.float32)}, n_slots,
+            max_prompt)
+
+    return ServeSession(chunk_fn, refill_fn, None, factory(),
+                        n_slots=n_slots, chunk=chunk, max_prompt=max_prompt,
+                        eos_id=eos_id, state_factory=factory, **kw)
+
+
+def reference_tokens(prompts, max_news, **kw):
+    """Fault-free isolated runs: the one right answer per request."""
+    out = []
+    for p, n in zip(prompts, max_news):
+        sess = make_chaos_session(**kw)
+        h = sess.submit(p, n)
+        sess.drain()
+        out.append(h.tokens)
+    return out
+
+
+def run_to_completion(sess, handles, max_polls=500):
+    """Drive poll() to quiescence, recovering from any wedge."""
+    wedges = 0
+    for _ in range(max_polls):
+        if all(h.done for h in handles):
+            return wedges
+        try:
+            sess.poll()
+        except SessionWedged:
+            sess.recover_wedged()
+            wedges += 1
+    raise AssertionError("session did not drain within the poll budget")
+
+
+# ----------------------------------------------------------------------------
+# FaultPlan semantics
+# ----------------------------------------------------------------------------
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        Fault("melt_down", 0)
+    with pytest.raises(ValueError):
+        Fault("wedge", -1)
+    with pytest.raises(ValueError):
+        Fault("kill_slot", 2)               # slot-targeted without a slot
+    with pytest.raises(ValueError):
+        Fault("wedge", 2, slot=1)           # wedge does not take a slot
+
+
+def test_fault_plan_fires_exactly_once():
+    plan = (FaultPlan().kill_slot(at_chunk=3, slot=1).wedge(at_chunk=5)
+            .refill_error(at_chunk=2))
+    assert plan.kills(2) == []              # wrong chunk: nothing fires
+    assert plan.kills(3) == [1]
+    assert plan.kills(3) == []              # consumed
+    assert plan.pending_wedge and not plan.wedged(4)
+    assert plan.wedged(5) and not plan.wedged(5)
+    assert not plan.pending_wedge
+    with pytest.raises(InjectedFault):
+        plan.check_refill(2)
+    plan.check_refill(2)                    # consumed: no raise
+    assert plan.exhausted
+    s = plan.summary()
+    assert s["planned"] == s["fired"] == 3
+    assert s["by_kind"]["kill_slot"] == 1
+    assert [k for k, _, _ in plan.fired] == ["kill_slot", "wedge",
+                                             "refill_error"]
+
+
+# ----------------------------------------------------------------------------
+# Checkpoint/resume: the slot snapshot is bit-exact
+# ----------------------------------------------------------------------------
+
+
+def test_slot_snapshot_restore_bit_exact():
+    sess = make_chaos_session(n_slots=3)
+    for size in (1, 2, 3):
+        sess.submit(list(range(size)), 8)
+    sess.poll()                             # admit + one chunk: live rows
+    state = sess.state
+    state["cache"]["kv"] = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    snap = engine.make_slot_snapshot()(state, np.int32(1))
+    fresh = engine.init_session_state(
+        {"kv": jnp.zeros((3, 4), jnp.float32)}, 3, 4)
+    restored = engine.make_slot_restore(donate=False)(
+        fresh, np.int32(1), snap)
+    for k in engine.SLOT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(restored[k][1]),
+                                      np.asarray(state[k][1]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(restored["cache"]["kv"][1]),
+                                  np.asarray(state["cache"]["kv"][1]))
+    assert bool(restored["active"][1]) and int(restored["age"][1]) == 1
+    # untouched neighbours stay zeroed
+    assert int(np.asarray(restored["pos"])[[0, 2]].sum()) == 0
+
+
+def test_preemption_resume_is_bit_identical():
+    prompts, max_news = [[0], [0, 1], [0]], [8, 8, 4]
+    ref = reference_tokens(prompts, max_news, n_slots=2)
+    sess = make_chaos_session(n_slots=2, aging_rounds=10_000)
+    tp = [sess.submit(prompts[i], max_news[i], klass="throughput")
+          for i in (0, 1)]
+    sess.poll()                             # pool full, one chunk decoded
+    lat = sess.submit(prompts[2], max_news[2], klass="latency")
+    sess.drain()
+    st = sess.stats()
+    assert st["preemptions"] == 1
+    assert st["classes"]["throughput"]["preempted"] == 1
+    assert lat.ok and all(h.ok for h in tp)
+    for h, want in zip(tp + [lat], ref):
+        np.testing.assert_array_equal(h.tokens, want)
+
+
+# ----------------------------------------------------------------------------
+# Kill: quarantine + retry; NaN: sentinel scan + recycle
+# ----------------------------------------------------------------------------
+
+
+def test_kill_fault_quarantines_slot_and_retries_bit_identical():
+    prompts, max_news = [[0]] * 3, [8] * 3
+    ref = reference_tokens(prompts, max_news)
+    plan = FaultPlan().kill_slot(at_chunk=2, slot=1)
+    sess = make_chaos_session(retry_backoff_s=0.001, faults=plan)
+    handles = [sess.submit(p, n) for p, n in zip(prompts, max_news)]
+    sess.drain()
+    st = sess.stats()
+    assert plan.exhausted
+    assert st["quarantined_slots"] == [1] and st["usable_slots"] == 2
+    assert st["retries"] == 1 and st["requests_failed"] == 0
+    assert st["faults"]["by_kind"]["kill_slot"] == 1
+    for h, want in zip(handles, ref):
+        assert h.ok
+        np.testing.assert_array_equal(h.tokens, want)
+
+
+def test_nan_corruption_detected_and_slot_recycled():
+    prompts, max_news = [[0]] * 3, [8] * 3
+    ref = reference_tokens(prompts, max_news)
+    plan = FaultPlan().corrupt_nan(at_chunk=1, slot=0)
+    sess = make_chaos_session(retry_backoff_s=0.001, faults=plan)
+    handles = [sess.submit(p, n) for p, n in zip(prompts, max_news)]
+    sess.drain()
+    st = sess.stats()
+    assert plan.exhausted and st["retries"] == 1
+    # transient corruption never costs pool capacity
+    assert st["quarantined_slots"] == [] and st["usable_slots"] == 3
+    for h, want in zip(handles, ref):
+        assert h.ok
+        np.testing.assert_array_equal(h.tokens, want)
+
+
+# ----------------------------------------------------------------------------
+# Wedge: the watchdog raises instead of blocking forever
+# ----------------------------------------------------------------------------
+
+
+def test_wedge_raises_session_wedged_then_recovers():
+    prompts, max_news = [[0], [0, 1]], [6, 6]
+    ref = reference_tokens(prompts, max_news, n_slots=2)
+    plan = FaultPlan().wedge(at_chunk=1)
+    sess = make_chaos_session(n_slots=2, retry_backoff_s=0.001, faults=plan)
+    handles = [sess.submit(p, n) for p, n in zip(prompts, max_news)]
+    sess.poll(timeout_s=0.2)                # chunk 0 completes
+    with pytest.raises(SessionWedged) as exc:
+        sess.poll(timeout_s=0.2)
+    assert exc.value.chunk == 1 and exc.value.timeout_s == 0.2
+    assert "host_syncs" in exc.value.stall
+    with pytest.raises(RuntimeError, match="recover_wedged"):
+        sess.poll()                         # latched until recovery
+    sess.recover_wedged()
+    sess.drain()
+    st = sess.stats()
+    assert st["retries"] == 2               # both running slots restarted
+    for h, want in zip(handles, ref):
+        assert h.ok
+        np.testing.assert_array_equal(h.tokens, want)
+
+
+def test_session_watchdog_s_applies_to_drain_and_stream():
+    plan = FaultPlan().wedge(at_chunk=0)
+    sess = make_chaos_session(watchdog_s=0.2, faults=plan)
+    sess.submit([0], 6)
+    with pytest.raises(SessionWedged):
+        sess.drain()
+    sess.recover_wedged()
+    sess2 = make_chaos_session(faults=FaultPlan().wedge(at_chunk=0))
+    sess2.submit([0], 6)
+    with pytest.raises(SessionWedged):
+        for _ in sess2.stream(timeout_s=0.2):
+            pass
+
+
+def test_scripted_wedge_without_watchdog_is_a_config_error():
+    sess = make_chaos_session(faults=FaultPlan().wedge(at_chunk=0))
+    sess.submit([0], 6)
+    with pytest.raises(RuntimeError, match="bounds the device wait"):
+        sess.poll()
+
+
+# ----------------------------------------------------------------------------
+# Refill faults: un-admit + retry, bounded
+# ----------------------------------------------------------------------------
+
+
+def test_refill_error_is_retried_and_completes():
+    ref = reference_tokens([[0]], [6])
+    plan = FaultPlan().refill_error(at_chunk=0)
+    sess = make_chaos_session(faults=plan)
+    h = sess.submit([0], 6)
+    sess.drain()
+    assert plan.exhausted and h.ok
+    np.testing.assert_array_equal(h.tokens, ref[0])
+
+
+def test_persistent_refill_failure_surfaces():
+    class RefillBroken(RuntimeError):
+        pass
+
+    def broken_refill(*a, **k):
+        raise RefillBroken("device refill rejected")
+
+    script = np.tile(BASE[:, None], (1, 2))
+    chunk_fn = engine.make_session_chunk(scripted_step(script), 2)
+    state = engine.init_session_state({"kv": jnp.zeros((2, 4), jnp.float32)},
+                                      2, 4)
+    sess = ServeSession(chunk_fn, broken_refill, None, state, n_slots=2,
+                        chunk=2, max_prompt=4, max_retries=1)
+    sess.submit([0], 4)
+    with pytest.raises(RefillBroken):
+        for _ in range(8):
+            sess.poll()
+
+
+# ----------------------------------------------------------------------------
+# Typed failure reasons on the handle
+# ----------------------------------------------------------------------------
+
+
+def test_shed_request_raises_typed_failure():
+    sess = make_chaos_session(n_slots=1, shed_watermark=1)
+    running = sess.submit([0], 8)
+    sess.poll()                             # occupy the only slot
+    shed = sess.submit([0], 4, klass="best_effort")   # queued, within depth
+    sess.submit([0], 4)                     # latency overflow sheds the be
+    assert shed.done and shed.failed and shed.fail_reason == "shed"
+    with pytest.raises(RequestFailed) as exc:
+        shed.result()
+    assert exc.value.reason == "shed" and exc.value.rid == shed.id
+    # the shed event surfaces exactly once, with an empty payload
+    ev = [e for e in sess.poll() if e[0] is shed]
+    assert len(ev) == 1 and ev[0][1].size == 0 and ev[0][2]
+    sess.drain()
+    assert running.ok and sess.stats()["classes"]["best_effort"]["shed"] == 1
+
+
+def test_retries_exhausted_raises_typed_failure():
+    plan = FaultPlan().kill_slot(at_chunk=0, slot=0)
+    sess = make_chaos_session(n_slots=1, max_retries=0, faults=plan)
+    h = sess.submit([0], 8)
+    sess.drain()
+    assert h.failed and h.fail_reason == "retries_exhausted"
+    with pytest.raises(RequestFailed) as exc:
+        h.result()
+    assert exc.value.reason == "retries_exhausted"
+    st = sess.stats()
+    assert st["requests_failed"] == 1 and st["usable_slots"] == 0
+
+
+# ----------------------------------------------------------------------------
+# The acceptance chaos run, scripted: kill + NaN + wedge in one stream
+# ----------------------------------------------------------------------------
+
+
+def test_scripted_chaos_run_is_bit_identical():
+    prompts = [[0], [0, 1], [0], [0, 1, 2], [0], [0, 1]]
+    max_news = [6, 6, 8, 4, 6, 6]
+    ref = reference_tokens(prompts, max_news)
+    plan = (FaultPlan()
+            .kill_slot(at_chunk=2, slot=1)
+            .corrupt_nan(at_chunk=3, slot=0)
+            .wedge(at_chunk=5))
+    sess = make_chaos_session(watchdog_s=0.25, max_retries=3,
+                              retry_backoff_s=0.001, faults=plan)
+    handles = [sess.submit(p, n) for p, n in zip(prompts, max_news)]
+    wedges = run_to_completion(sess, handles)
+    st = sess.stats()
+    assert plan.exhausted and wedges == 1
+    assert st["quarantined_slots"] == [1]
+    assert st["retries"] >= 2 and st["requests_failed"] == 0
+    for i, (h, want) in enumerate(zip(handles, ref)):
+        assert h.ok, f"request {i} did not survive chaos"
+        np.testing.assert_array_equal(
+            h.tokens, want,
+            err_msg=f"request {i} diverged from the fault-free run")
+
+
+# ----------------------------------------------------------------------------
+# Model path: the stacked-layer cache takes/puts slot rows correctly
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_model_path_preemption_and_kill_bit_identical():
+    """qwen3's KV cache has stacked layer axes, so the model-path
+    snapshot/restore goes through steps.take/put_cache_slot — pin that a
+    preempted *and* a killed request both resume bit-identically on the
+    real decode step."""
+    cluster = Cluster("qwen3-14b-smoke")
+    program = cluster.compile(ServeSessionProgram(
+        slots=2, max_seq=32, max_prompt=4, chunk=2, preempt=True,
+        max_retries=2, retry_backoff_s=0.001))
+    params = program.init_params()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cluster.arch.vocab, size=3).astype(np.int32)
+               for _ in range(3)]
+
+    ref_sess = program.open(params=params)
+    ref = [ref_sess.submit(p, 8, klass="throughput") for p in prompts]
+    ref_sess.drain()
+
+    plan = FaultPlan().kill_slot(at_chunk=1, slot=0)
+    sess = program.open(params=params, faults=plan)
+    tp = [sess.submit(p, 8, klass="throughput") for p in prompts[:2]]
+    sess.poll()                             # pool full, one chunk decoded
+    lat = sess.submit(prompts[2], 8, klass="latency")
+    sess.drain()
+    st = sess.stats()
+    assert plan.exhausted
+    assert st["preemptions"] >= 1 and st["retries"] >= 1
+    for h, want in zip(tp + [lat], ref):
+        assert h.ok
+        np.testing.assert_array_equal(h.tokens, want.tokens)

@@ -6,6 +6,13 @@ it must never double-assign a slot, must admit FIFO submissions in
 order, must terminate every admitted request (given slots drain), and
 must free slots on cancel. Backpressure: a bounded queue raises
 QueueFull instead of growing without limit.
+
+The SLO layer adds three properties (the ones the serving claims rest
+on): at equal age a latency request is never admitted behind a
+throughput request (and throughput never behind best-effort); under a
+constant stream of fresh latency traffic, aging still gets every queued
+best-effort request admitted within a bounded number of rounds (no
+starvation); and overload shedding only ever fails best-effort work.
 """
 
 import random
@@ -18,7 +25,8 @@ try:
 except ImportError:                                   # pragma: no cover
     from hypothesis_fallback import given, settings, strategies as st
 
-from repro.runtime.scheduler import (CANCELLED, DONE, QUEUED, QueueFull,
+from repro.runtime.scheduler import (CANCELLED, CLASSES, DONE, FAILED,
+                                     QUEUED, QueueFull, REASON_SHED,
                                      RUNNING, SlotScheduler)
 
 
@@ -148,6 +156,133 @@ def test_bounded_queue_raises_queue_full():
     sched.admit()                             # pops one from the queue
     # note: admit drains the queue into the slot — room again
     sched.submit([1], 1)
+
+
+# ----------------------------------------------------------------------------
+# SLO properties: class ordering, anti-starvation aging, shed targeting
+# ----------------------------------------------------------------------------
+
+
+def _drain_order(sched):
+    """Admit + instantly finish until idle; the admission order is the
+    scheduling decision under test."""
+    for _ in range(10_000):
+        if not sched.busy:
+            break
+        sched.admit()
+        for slot, req in list(sched.running_requests()):
+            req.state = DONE
+            sched.release(slot)
+    return list(sched.admitted_order)
+
+
+@settings(deadline=None, max_examples=25)
+@given(n_slots=st.integers(1, 3), n_req=st.integers(2, 12),
+       seed=st.integers(0, 10))
+def test_equal_age_latency_never_behind_throughput(n_slots, n_req, seed):
+    # aging disabled-in-practice (huge aging_rounds): pure class order
+    rng = np.random.default_rng(seed)
+    sched = SlotScheduler(n_slots, aging_rounds=10_000)
+    by_class = {k: [] for k in CLASSES}
+    for _ in range(n_req):
+        k = CLASSES[rng.integers(0, 3)]
+        by_class[k].append(sched.submit([1], 2, klass=k).rid)
+    order = _drain_order(sched)
+    pos = {rid: i for i, rid in enumerate(order)}
+    for hi, lo in (("latency", "throughput"), ("throughput", "best_effort")):
+        for h in by_class[hi]:
+            for l in by_class[lo]:
+                assert pos[h] < pos[l], (
+                    f"{hi} rid {h} admitted behind {lo} rid {l}")
+    # same-class FIFO: submit order preserved within each class
+    for k in CLASSES:
+        assert [p for p in order if p in set(by_class[k])] == by_class[k]
+
+
+@settings(deadline=None, max_examples=10)
+@given(aging=st.integers(1, 6), seed=st.integers(0, 5))
+def test_no_starvation_under_constant_latency_pressure(aging, seed):
+    """A queued best-effort request outranks fresh latency traffic after
+    rank_gap * aging_rounds waited rounds — it must be admitted within a
+    bounded number of rounds no matter how much latency work keeps
+    arriving."""
+    sched = SlotScheduler(1, aging_rounds=aging)
+    be = sched.submit([1], 1, klass="best_effort")
+    bound = 2 * aging + 4                       # rank gap 2, plus slack
+    for round_i in range(10 * bound):
+        sched.submit([1], 1, klass="latency")   # fresh pressure every round
+        for slot, req in sched.admit():
+            req.state = DONE
+            sched.release(slot)
+        if be.state == DONE:
+            break
+    assert be.state == DONE, "best-effort request starved"
+    assert round_i <= bound, (
+        f"admitted after {round_i} rounds; bound is {bound}")
+
+
+@settings(deadline=None, max_examples=25)
+@given(watermark=st.integers(1, 6), n_req=st.integers(1, 20),
+       seed=st.integers(0, 10))
+def test_shed_only_touches_best_effort(watermark, n_req, seed):
+    rng = np.random.default_rng(seed)
+    sched = SlotScheduler(1, shed_watermark=watermark)
+    reqs = []
+    for _ in range(n_req):
+        k = CLASSES[rng.integers(0, 3)]
+        reqs.append(sched.submit([1], 2, klass=k))
+    shed = [r for r in reqs if r.state == FAILED]
+    assert all(r.klass == "best_effort" for r in shed)
+    assert all(r.fail_reason == REASON_SHED for r in shed)
+    # depth only exceeds the watermark when no best-effort is left to shed
+    be_queued = [r for r in reqs
+                 if r.state == QUEUED and r.klass == "best_effort"]
+    if sched.queued > watermark:
+        assert not be_queued
+    assert sched.pop_shed() == shed             # driver sees every victim
+    assert sched.pop_shed() == []               # ... exactly once
+    # everything that wasn't shed still terminates
+    order = _drain_order(sched)
+    assert sorted(order) == sorted(r.rid for r in reqs if r not in shed)
+
+
+def test_preempt_victim_picks_lowest_class_most_recent():
+    sched = SlotScheduler(3, aging_rounds=10_000)
+    tp1 = sched.submit([1], 8, klass="throughput")
+    be = sched.submit([1], 8, klass="best_effort")
+    tp2 = sched.submit([1], 8, klass="throughput")
+    sched.admit()
+    slot, victim = sched.preempt_victim(for_rank=0)
+    assert victim is be                         # lowest class first
+    _, for_tp = sched.preempt_victim(for_rank=1)
+    assert for_tp is be                         # a tp claimant only evicts be
+    victim.state = DONE
+    sched.release(slot)
+    slot, victim = sched.preempt_victim(for_rank=0)
+    assert victim is tp2                        # then most recently started
+    assert sched.preempt_victim(for_rank=1) is None   # tp never evicts tp
+    for s, r in list(sched.running_requests()):
+        r.state = DONE
+        sched.release(s)
+    assert sched.preempt_victim(for_rank=0) is None
+
+
+def test_quarantined_slot_never_reassigned():
+    sched = SlotScheduler(2)
+    a = sched.submit([1], 2)
+    b = sched.submit([1], 2)
+    sched.admit()
+    bad = a.slot
+    a.state = DONE
+    sched.release(bad)
+    sched.quarantine(bad)
+    assert bad not in sched.free_slots()
+    assert sched.usable_slots == 1
+    c = sched.submit([1], 2)
+    b.state = DONE
+    sched.release(b.slot)
+    admits = sched.admit()
+    assert [s for s, _ in admits] != [bad] and c.slot != bad
 
 
 def test_scheduler_validation():

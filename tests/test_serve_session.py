@@ -18,7 +18,7 @@ import pytest
 
 from repro.cluster import Cluster, ServeProgram, ServeSessionProgram
 from repro.runtime import engine
-from repro.runtime.scheduler import QueueFull
+from repro.runtime.scheduler import QueueFull, RequestFailed
 from repro.runtime.serve_loop import ServeLoop, ServeSession
 
 
@@ -150,7 +150,10 @@ def test_cancel_running_frees_slot_for_queued_work():
     sess.drain()
     assert a.cancelled and a.tokens.size == 2     # truncated, kept
     assert b.done and b.tokens.size == 2          # got the freed slot
-    assert a.result().size == 2                   # cancelled result() is fine
+    with pytest.raises(RequestFailed) as exc:     # typed failure, partial
+        a.result()                                # tokens attached
+    assert exc.value.reason == "cancelled"
+    assert exc.value.partial_tokens.size == 2
 
 
 def test_cancel_queued_never_runs():
