@@ -206,6 +206,10 @@ def fused_rows(smoke: bool = False) -> list[dict]:
         t_fused = timeit(fused_fn, reps=reps)
         t_unfused = timeit(unfused_fn, reps=reps)
         model = fused.fused_vs_unfused(name, shapes)
+        # race the fusion against its own unfused composition (registry-first
+        # — warm DB runs don't re-race) and report which route the tuner
+        # will dispatch for this shape
+        rec = pp.tuned_record(name, shapes)
         out.append({
             "name": f"table1_fused/{name}",
             "us_fused": t_fused * 1e6,
@@ -213,6 +217,7 @@ def fused_rows(smoke: bool = False) -> list[dict]:
             "fused_bytes": model["fused_bytes"],
             "unfused_bytes": model["unfused_bytes"],
             "bytes_reduction": model["reduction"],
+            "route": rec.route,
         })
     return out
 
@@ -237,7 +242,8 @@ def main(smoke: bool = False) -> list[str]:
             f"unfused_us={r['us_unfused']:.1f};"
             f"fused_GB={r['fused_bytes'] / 1e9:.4f};"
             f"unfused_GB={r['unfused_bytes'] / 1e9:.4f};"
-            f"bytes_reduction={r['bytes_reduction']:.2f}")
+            f"bytes_reduction={r['bytes_reduction']:.2f};"
+            f"route={r['route']}")
     return lines
 
 

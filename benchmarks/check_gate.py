@@ -16,6 +16,10 @@ Checks (each prints one `gate ok:`/`gate FAIL:` line; any FAIL exits 1):
           `classes` (per-class SLO rows: latency/throughput/best_effort +
           the serve/slo roll-up, with the scripted contention actually
           exercised — >=1 preemption, >=1 shed, 0 latency deadline misses)
+          `paged`  (serve/paged_kv + serve/prefix_reuse rows: positive
+          tok/s, prefix reuse actually skipping prefill, warm TTFT
+          faster than cold, and capacity_x strictly > 1 — the paged
+          layout's equal-memory concurrency claim)
   baseline (optional, vs a committed copy of BENCH_table1.json):
           decode K16 stall_pct must not rise more than --stall-tol
           percentage points; serve continuous occupancy_pct must not drop
@@ -37,7 +41,7 @@ import json
 import sys
 from pathlib import Path
 
-REQUIREMENTS = ("tuned", "fused", "decode", "serve", "classes")
+REQUIREMENTS = ("tuned", "fused", "decode", "serve", "classes", "paged")
 
 CLASS_ROWS = ("serve/class_latency", "serve/class_throughput",
               "serve/class_best_effort")
@@ -126,6 +130,26 @@ def check_require(gate: Gate, record: dict, require: list[str]) -> None:
             gate.check(int(lat.get("deadline_miss", 1)) == 0, "classes",
                        f"latency class deadline misses: "
                        f"{lat.get('deadline_miss')}")
+    if "paged" in require:
+        by = _by_name(record.get("serve_continuous", []))
+        missing = [n for n in ("serve/paged_kv", "serve/prefix_reuse")
+                   if n not in by]
+        gate.check(not missing, "paged",
+                   f"paged rows present (missing: {missing or 'none'})")
+        if not missing:
+            kv = _derived(by["serve/paged_kv"])
+            gate.check(float(kv.get("tokens_per_s", 0)) > 0, "paged",
+                       f"paged tok/s {kv.get('tokens_per_s')}")
+            gate.check(float(kv.get("capacity_x", 0)) > 1.0, "paged",
+                       f"capacity_x {kv.get('capacity_x')} > 1 at equal "
+                       f"memory")
+            pre = _derived(by["serve/prefix_reuse"])
+            gate.check(int(pre.get("prefill_skipped", 0)) > 0, "paged",
+                       f"prefill skipped "
+                       f"{pre.get('prefill_skipped')} tokens")
+            gate.check(float(pre.get("ttft_speedup_x", 0)) > 1.0, "paged",
+                       f"warm-vs-cold TTFT speedup "
+                       f"{pre.get('ttft_speedup_x')}x")
 
 
 def check_baseline(gate: Gate, record: dict, baseline: dict,

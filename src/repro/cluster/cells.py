@@ -59,7 +59,8 @@ def layer_gather_specs(cfg, mesh, rules):
 
 def build_cell(cfg, shape, mesh, rules, fsdp_gather: bool = False,
                policy=None, decode_chunk: int = 1, session: bool = False,
-               max_prompt: int = 8):
+               max_prompt: int = 8, paged: bool = False,
+               page_size: int = 16):
     """Returns (fn, args_sds, in_shardings, out_shardings, donate).
 
     `decode_chunk > 1` (decode shapes only) builds the execution-engine
@@ -71,7 +72,10 @@ def build_cell(cfg, shape, mesh, rules, fsdp_gather: bool = False,
     cell instead: the K-step slot-scheduled chunk over the donated pool
     state (per-slot positions, prompt buffers, budgets — see
     `engine.session_chunk_fn`), mirroring what a compiled
-    `ServeSessionProgram` steps between refills.
+    `ServeSessionProgram` steps between refills. `paged=True` (session
+    shapes) lowers the shared-paged-KV variant of that cell: pageable
+    K/V leaves become the global page pool and the state carries the
+    per-slot page tables (`ServeSessionProgram(paged=True)`).
     """
     batch_sds = input_specs(cfg, shape)
     batch_log = batch_logical(cfg, shape)
@@ -109,16 +113,28 @@ def build_cell(cfg, shape, mesh, rules, fsdp_gather: bool = False,
                                       policy=policy)
         fn = engine.session_chunk_fn(step, decode_chunk)
         B = shape.global_batch
+        pps = None
+        if paged:
+            # pageable K/V leaves move into the shared pool; the state
+            # grows a (B, pages_per_slot) page-table row
+            pps = -((shape.seq_len + 1) // -page_size)   # ceil
+            cache_sds, cache_log = steps.abstract_paged_cache(
+                cfg, B, cache_len, n_pages=B * pps + 1,
+                page_size=page_size)
+            cache_sh = shardings_for(cache_sds, cache_log, mesh, rules)
         # the pool-state spec is whatever init_session_state builds — one
         # source of truth, so engine-side field changes propagate here
         state_sds = jax.eval_shape(
-            lambda c: engine.init_session_state(c, B, max_prompt), cache_sds)
+            lambda c: engine.init_session_state(c, B, max_prompt,
+                                                pages_per_slot=pps),
+            cache_sds)
         slot_sh = NamedSharding(mesh, rules.spec_for(("batch",), (B,), mesh))
         buf_sh = lambda n: NamedSharding(
             mesh, rules.spec_for(("batch", None), (B, n), mesh))
         state_sh = {k: (cache_sh if k == "cache" else
                         buf_sh(1) if k == "tok" else
-                        buf_sh(max_prompt) if k == "prompt_buf" else slot_sh)
+                        buf_sh(max_prompt) if k == "prompt_buf" else
+                        buf_sh(pps) if k == "pages" else slot_sh)
                     for k in state_sds}
         scalar_sh = NamedSharding(mesh, jax.sharding.PartitionSpec())
         out_sh = (state_sh, buf_sh(decode_chunk), buf_sh(decode_chunk),

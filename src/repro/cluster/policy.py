@@ -136,13 +136,19 @@ class KernelPolicy:
                 # (the real ones may be tracers) and keeps the measured
                 # winner, bumping tune_races and writing the TuneDB
                 self.bump("tune_misses")
-                blocks = dict(pipeline.autotune(
+                tune = pipeline.autotune(
                     name, shapes, dtype_bytes=dtype_bytes,
-                    mode=None if self.tuning == "auto" else self.tuning
-                ).blocks)
+                    mode=None if self.tuning == "auto" else self.tuning)
+                blocks, route = dict(tune.blocks), tune.route
             else:
                 self.bump("tune_hits")
-                blocks = dict(rec.blocks)
+                blocks, route = dict(rec.blocks), rec.route
+            if route == "unfused" and desc.composition is not None:
+                # the race demoted this fusion on these shapes — run the
+                # unfused composition of primitive kernels instead (blocks
+                # stay recorded in case the composition route is retired)
+                self.bump("unfused_routes")
+                return desc.composition(*operands, **kwargs)
         else:
             self.bump("block_overrides")
         return desc.wrapper(*operands, **blocks, **kwargs)

@@ -97,6 +97,15 @@ class ServeSessionProgram:
     fault recovery (`max_retries`, `retry_backoff_s`), and the NaN
     corruption sentinel (`nan_check`); `open(faults=FaultPlan(...))` arms
     scripted fault injection for chaos runs.
+
+    `paged=True` swaps the per-slot private KV layout for the shared
+    paged pool (runtime/kvpool.py): attention K/V lives in one global
+    page array, slots hold page tables, refill installs tables instead
+    of zeroing cache rows, and shared prompt prefixes are reused
+    copy-on-write so repeated preambles skip prefill entirely. Paged
+    sessions run with preemption off (slot snapshots do not carry page
+    tables) and require an arch with positional attention (windowed /
+    recurrent-only archs keep their private layout and reject `paged`).
     """
 
     slots: int = 4                         # slot-pool size (batch rows)
@@ -122,6 +131,13 @@ class ServeSessionProgram:
     #   re-admission backoff after a fault restart
     nan_check: bool = False                # scan cache rows for NaN every
     #   chunk (auto-on when a FaultPlan scripts corruption)
+    paged: bool = False                    # shared paged KV pool with COW
+    #   prefix reuse (forces preempt off; see class docstring)
+    page_size: int = 16                    # tokens per KV page
+    n_pages: int | None = None             # pool size; None -> slots *
+    #   pages_per_slot + 1 (trash page), i.e. private-layout capacity
+    prefix_cache: bool = True              # publish finished prompts for
+    #   COW prefix reuse across requests
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +151,9 @@ class DryRunProgram:
     #   scan-compiled engine cell instead of the single-step one
     session: bool = False                  # decode shapes: lower the slot-
     #   scheduled session cell (donated pool state) instead
+    paged: bool = False                    # session shapes: lower the
+    #   shared-paged-KV session cell (page tables in state)
+    page_size: int = 16                    # tokens per KV page (paged)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -506,19 +525,42 @@ class CompiledServeSession(Program):
                                       policy=policy)
         self._chunk_fn = engine.make_session_chunk(step, spec.chunk,
                                                    eos_id=spec.eos_id)
-        self._refill_fn = engine.make_session_refill(
-            cache_zero=steps.zero_cache_slots)
-        # checkpoint/restore + fault programs over the model cache layout
-        # (stacked layer axes — the steps.py helpers know which axis is
-        # batch per leaf; the engine defaults only cover flat caches)
-        self._snapshot_fn = engine.make_slot_snapshot(
-            cache_take=steps.take_cache_slot)
-        self._restore_fn = engine.make_slot_restore(
-            cache_put=steps.put_cache_slot)
-        self._nan_scan_fn = engine.make_nan_scan(
-            cache_nan=steps.nan_cache_slots)
-        self._corrupt_fn = engine.make_slot_corrupt(
-            cache_fill=steps.fill_cache_slots)
+        if spec.paged:
+            # shared paged KV pool: refill installs page tables, fault
+            # programs route pool leaves by table (steps.py paged ops);
+            # snapshot/restore stay None — preemption is off under paged
+            pps = -((spec.max_seq + 1) // -spec.page_size)   # ceil
+            self._pages_per_slot = pps
+            self._n_pages = (spec.n_pages if spec.n_pages is not None
+                             else spec.slots * pps + 1)      # +1: trash page
+            ops = steps.make_paged_cache_ops(
+                cfg, spec.slots, steps.decode_cache_len(cfg, spec.max_seq))
+            self._refill_fn = engine.make_paged_session_refill(
+                cache_zero=ops["zero_slots"])
+            self._snapshot_fn = None
+            self._restore_fn = None
+            self._nan_scan_fn = engine.make_paged_nan_scan(ops["nan_slots"])
+            self._corrupt_fn = engine.make_paged_slot_corrupt(
+                ops["corrupt_slots"])
+            self._page_copy_fn = engine.make_page_copy(ops["copy_pages"])
+            self._page_scrub_fn = engine.make_page_scrub(ops["zero_pages"])
+        else:
+            self._refill_fn = engine.make_session_refill(
+                cache_zero=steps.zero_cache_slots)
+            # checkpoint/restore + fault programs over the model cache
+            # layout (stacked layer axes — the steps.py helpers know which
+            # axis is batch per leaf; the engine defaults only cover flat
+            # caches)
+            self._snapshot_fn = engine.make_slot_snapshot(
+                cache_take=steps.take_cache_slot)
+            self._restore_fn = engine.make_slot_restore(
+                cache_put=steps.put_cache_slot)
+            self._nan_scan_fn = engine.make_nan_scan(
+                cache_nan=steps.nan_cache_slots)
+            self._corrupt_fn = engine.make_slot_corrupt(
+                cache_fill=steps.fill_cache_slots)
+            self._page_copy_fn = None
+            self._page_scrub_fn = None
         self._last_session = None
 
     def init_params(self, seed: int | None = None):
@@ -529,8 +571,15 @@ class CompiledServeSession(Program):
 
     def _make_state(self):
         cfg, spec = self.cluster.arch, self.spec
-        cache = steps.init_cache(cfg, spec.slots,
-                                 steps.decode_cache_len(cfg, spec.max_seq))
+        clen = steps.decode_cache_len(cfg, spec.max_seq)
+        if spec.paged:
+            cache = steps.init_paged_cache(cfg, spec.slots, clen,
+                                           n_pages=self._n_pages,
+                                           page_size=spec.page_size)
+            return engine.init_session_state(
+                cache, spec.slots, spec.max_prompt,
+                pages_per_slot=self._pages_per_slot)
+        cache = steps.init_cache(cfg, spec.slots, clen)
         return engine.init_session_state(cache, spec.slots, spec.max_prompt)
 
     def open(self, params=None, faults=None):
@@ -542,6 +591,12 @@ class CompiledServeSession(Program):
         spec = self.spec
         if params is None:
             params = self.init_params()
+        kv = None
+        if spec.paged:
+            from repro.runtime.kvpool import PagedKV
+            kv = PagedKV(self._n_pages, spec.page_size, spec.slots,
+                         self._pages_per_slot,
+                         prefix_cache=spec.prefix_cache)
         sess = ServeSession(self._chunk_fn, self._refill_fn, params,
                             self._make_state(),
                             n_slots=spec.slots, chunk=spec.chunk,
@@ -550,7 +605,7 @@ class CompiledServeSession(Program):
                             admission=spec.admission,
                             shed_watermark=spec.shed_watermark,
                             aging_rounds=spec.aging_rounds,
-                            preempt=spec.preempt,
+                            preempt=spec.preempt and not spec.paged,
                             snapshot_fn=self._snapshot_fn,
                             restore_fn=self._restore_fn,
                             nan_scan_fn=self._nan_scan_fn,
@@ -560,6 +615,9 @@ class CompiledServeSession(Program):
                             max_retries=spec.max_retries,
                             retry_backoff_s=spec.retry_backoff_s,
                             nan_check=spec.nan_check,
+                            kv=kv,
+                            page_copy_fn=self._page_copy_fn,
+                            page_scrub_fn=self._page_scrub_fn,
                             faults=faults)
         self._last_session = sess
         return sess
@@ -652,7 +710,8 @@ class CompiledDryRun(Program):
             fn, args, in_sh, out_sh, donate = cells.build_cell(
                 cfg, shape, mesh, rules, fsdp_gather=spec.fsdp_gather,
                 policy=self.policy, decode_chunk=spec.decode_chunk,
-                session=spec.session)
+                session=spec.session, paged=spec.paged,
+                page_size=spec.page_size)
             t0 = time.time()
             with compat.set_mesh(mesh):
                 lowered = jax.jit(fn, in_shardings=in_sh,

@@ -234,6 +234,11 @@ class KernelTuneRecord:
     measured_us: float = 0.0
     default_us: float = 0.0
     source: str = "modeled"
+    # which implementation won the race: "fused" = the Pallas kernel body
+    # itself (with `blocks`), "unfused" = the op's unfused composition of
+    # primitive kernels beat every blocking — tuned_call dispatches the
+    # composition for this (kernel, shape) cell
+    route: str = "fused"
 
     @property
     def timed(self) -> bool:

@@ -90,7 +90,11 @@ class OpDescriptor:
     `streamed_operand` is the index of the main streamed operand — the one
     whose dtype sets the VMEM tile footprint (weights/scales/alpha ride
     along). `fused` marks kernels whose Traffic carries `saved_bytes` (an
-    eliminated intermediate).
+    eliminated intermediate); `composition` is the *unfused route* for a
+    fused kernel — the same math built from the primitive Pallas wrappers
+    plus jnp epilogues (NOT the pure-jnp `reference`) — which the timed
+    race runs as one extra lane, so a fusion that loses to its own parts
+    on real shapes is demoted per (kernel, shape) cell.
     """
 
     name: str
@@ -100,6 +104,7 @@ class OpDescriptor:
     streamed_operand: int = 0
     fused: bool = False
     operands: Callable[[dict, Any], tuple] | None = None
+    composition: Callable | None = None
 
 
 OPS: dict[str, OpDescriptor] = {}
@@ -536,6 +541,33 @@ def _ref_flash_attention_proj_op(q, k, v, wo, *, causal: bool = True, **_):
     return _ref_flash_attention_proj(causal, q, k, v, wo)
 
 
+# -- unfused compositions (the fused kernels' race opponents) ----------------
+# Same math as the fused kernel but built from the primitive Pallas
+# wrappers with jnp epilogues — i.e. what a caller would write without the
+# fusion. Block kwargs are swallowed (`**_`): each primitive tunes itself
+# through its own registry cell when called via the policy-dispatched
+# wrappers, so the composition lane carries no blocking of its own.
+
+
+def _comp_rmsnorm_matmul(x, scale, w, **_):
+    return matmul(rmsnorm(x, scale), w)
+
+
+def _comp_matmul_bias_act(a, b, bias, *, act: str = "gelu", **_):
+    h = matmul(a, b).astype(jnp.float32) + bias.astype(jnp.float32)
+    return _fused.ACTIVATIONS[act](h).astype(a.dtype)
+
+
+def _comp_matmul_residual_add(a, b, res, **_):
+    return (matmul(a, b).astype(jnp.float32)
+            + res.astype(jnp.float32)).astype(a.dtype)
+
+
+def _comp_flash_attention_proj(q, k, v, wo, *, causal: bool = True, **_):
+    o = flash_attention(q, k, v, causal=causal)
+    return jnp.einsum("bhsk,hkd->bsd", o, wo).astype(q.dtype)
+
+
 for _desc in (
     OpDescriptor("axpy", axpy, _shapes_axpy, _ref_axpy, streamed_operand=1,
                  operands=_mk_axpy),
@@ -552,15 +584,19 @@ for _desc in (
                  _ref_flash_attention, operands=_mk_flash_attention),
     OpDescriptor("rmsnorm_matmul", rmsnorm_matmul, _shapes_rmsnorm_matmul,
                  _ref_rmsnorm_matmul, fused=True,
-                 operands=_mk_rmsnorm_matmul),
+                 operands=_mk_rmsnorm_matmul,
+                 composition=_comp_rmsnorm_matmul),
     OpDescriptor("matmul_bias_act", matmul_bias_act, _shapes_matmul_epilogue,
                  _ref_matmul_bias_act_op, fused=True,
-                 operands=_mk_matmul_bias_act),
+                 operands=_mk_matmul_bias_act,
+                 composition=_comp_matmul_bias_act),
     OpDescriptor("matmul_residual_add", matmul_residual_add,
                  _shapes_matmul_epilogue, _ref_matmul_residual_add,
-                 fused=True, operands=_mk_matmul_residual_add),
+                 fused=True, operands=_mk_matmul_residual_add,
+                 composition=_comp_matmul_residual_add),
     OpDescriptor("flash_attention_proj", flash_attention_proj,
                  _shapes_flash_attention_proj, _ref_flash_attention_proj_op,
-                 fused=True, operands=_mk_flash_attention_proj),
+                 fused=True, operands=_mk_flash_attention_proj,
+                 composition=_comp_flash_attention_proj),
 ):
     register_op(_desc)

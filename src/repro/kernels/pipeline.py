@@ -595,7 +595,11 @@ class TuneResult:
     measured_us: float = 0.0
     default_us: float = 0.0
     source: str = "modeled"
-    raced: int = 0                  # candidates actually timed (incl. default)
+    raced: int = 0                  # lanes actually timed (incl. default)
+    # "fused": the kernel body won (with `blocks`); "unfused": the op's
+    # composition of primitive kernels beat every blocking, and tuned_call
+    # dispatches the composition for this (kernel, shapes) cell instead
+    route: str = "fused"
 
     @property
     def timed(self) -> bool:
@@ -640,6 +644,12 @@ class _RaceOutcome:
     measured_s: float
     default_s: float
     lanes: int
+    route: str = "fused"
+
+
+# sentinel "blocks" dict the composition lane hands the injectable timer —
+# tests key on it to force the unfused route to win or lose a race
+COMPOSITION_LANE = {"route": "unfused"}
 
 
 def _race_dtype(dtype_bytes: int):
@@ -656,6 +666,12 @@ def _race(kernel: str, shapes: dict, candidates: Sequence[dict],
     the measured winner; None when racing is impossible (no operand
     factory for this kernel, operand synthesis failed, or every lane
     errored) — the caller falls back to the modeled pick.
+
+    When the descriptor carries an unfused `composition`, it races as one
+    extra lane (timed with the `COMPOSITION_LANE` sentinel as its blocks
+    dict). If it beats every kernel blocking the outcome's route flips to
+    "unfused" — `blocks` still records the best *kernel* blocking so the
+    record stays usable if the composition is ever unavailable.
 
     `timer(fn, blocks) -> seconds` is injectable for deterministic tests;
     the default is `median_time` with REPRO_TUNE_REPS/1-warmup settings.
@@ -698,8 +714,20 @@ def _race(kernel: str, shapes: dict, candidates: Sequence[dict],
     default_key = tuple(sorted(default_blocks.items()))
     default_s = next(t for b, t in zip(lanes, times)
                      if tuple(sorted(b.items())) == default_key)
+    comp_s, comp_lanes = float("inf"), 0
+    if desc.composition is not None:
+        comp_lanes = 1
+        try:
+            comp_s = float(timer(lambda: desc.composition(*operands),
+                                 dict(COMPOSITION_LANE)))
+        except Exception:
+            comp_s = float("inf")
+    if comp_s < times[best]:
+        return _RaceOutcome(blocks=lanes[best], measured_s=comp_s,
+                            default_s=default_s,
+                            lanes=len(lanes) + comp_lanes, route="unfused")
     return _RaceOutcome(blocks=lanes[best], measured_s=times[best],
-                        default_s=default_s, lanes=len(lanes))
+                        default_s=default_s, lanes=len(lanes) + comp_lanes)
 
 
 def autotune(kernel: str, shapes: dict, *, dtype_bytes: int = 4,
@@ -745,7 +773,7 @@ def autotune(kernel: str, shapes: dict, *, dtype_bytes: int = 4,
 
     resolved = tunedb.tune_mode(mode)
     measured_us = default_us = 0.0
-    source, raced = "modeled", 0
+    source, raced, route = "modeled", 0, "fused"
     if resolved == "timed":
         top_n = _env_int("REPRO_TUNE_TOPN", 3) if top_n is None else top_n
         outcome = _race(kernel, shapes,
@@ -755,7 +783,7 @@ def autotune(kernel: str, shapes: dict, *, dtype_bytes: int = 4,
             best_blocks = dict(outcome.blocks)
             measured_us = outcome.measured_s * 1e6
             default_us = outcome.default_s * 1e6
-            source, raced = "timed", outcome.lanes
+            source, raced, route = "timed", outcome.lanes, outcome.route
             from repro.cluster.policy import current_policy
             current_policy().bump("tune_races")
 
@@ -766,7 +794,7 @@ def autotune(kernel: str, shapes: dict, *, dtype_bytes: int = 4,
                         default_blocks=dict(default),
                         default_cost=default_cost,
                         measured_us=measured_us, default_us=default_us,
-                        source=source, raced=raced)
+                        source=source, raced=raced, route=route)
     if register_record:
         from repro.configs import registry
         best_traffic = defn.traffic(shapes, best_blocks, dtype_bytes)
@@ -777,7 +805,8 @@ def autotune(kernel: str, shapes: dict, *, dtype_bytes: int = 4,
             default_blocks=tuple(sorted(default.items())),
             default_modeled_seconds=default_cost.total_s,
             saved_bytes=best_traffic.saved_bytes,
-            measured_us=measured_us, default_us=default_us, source=source))
+            measured_us=measured_us, default_us=default_us, source=source,
+            route=route))
         if source == "timed" and resolved != "frozen":
             db = tunedb.active_db()
             if db is not None:

@@ -88,6 +88,7 @@ def _record_to_json(rec: registry.KernelTuneRecord, backend: str,
         "measured_us": rec.measured_us,
         "default_us": rec.default_us,
         "source": rec.source,
+        "route": rec.route,
     }
 
 
@@ -104,6 +105,7 @@ def _record_from_json(d: dict) -> registry.KernelTuneRecord:
         measured_us=float(d.get("measured_us", 0.0)),
         default_us=float(d.get("default_us", 0.0)),
         source=str(d.get("source", "modeled")),
+        route=str(d.get("route", "fused")),
     )
 
 

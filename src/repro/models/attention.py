@@ -457,3 +457,64 @@ def update_cache(k_cache, v_cache, k_new, v_new, pos, *, rolling: bool = False):
     upd = jax.vmap(
         lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0))
     return upd(k_cache, k_new, slot), upd(v_cache, v_new, slot)
+
+
+# ----------------------------------------------------------------------------
+# Paged KV — the shared-pool routing of the two hooks above
+# (runtime/kvpool.py owns the host-side allocator; these are the device ops)
+# ----------------------------------------------------------------------------
+
+
+def paged_update_cache(k_pool, v_pool, k_new, v_new, pos, pages):
+    """Scatter (B, 1, KV, hd) new keys/values through per-slot page tables.
+
+    Pools are (n_pages, page_size, KV, hd) — the whole session shares them;
+    `pages` is the (B, pages_per_slot) int32 table and `pos` the scalar or
+    (B,) decode position. Slot b's token lands at
+    `pool[pages[b, pos_b // page_size], pos_b % page_size]` — the paged
+    analogue of `update_cache`'s per-slot dynamic-update-slice. Retired
+    slots' tables point at the reserved trash page 0, so their frozen-pos
+    writes can never corrupt pages reallocated to live requests.
+    """
+    ps = k_pool.shape[1]
+    b = k_new.shape[0]
+    pos_b = jnp.asarray(pos)
+    if pos_b.ndim == 0:
+        pos_b = jnp.full((b,), pos_b)
+    page_idx = jnp.take_along_axis(pages, (pos_b // ps)[:, None],
+                                   axis=1)[:, 0]            # (B,)
+    off = pos_b % ps
+    k_pool = k_pool.at[page_idx, off].set(k_new[:, 0])
+    v_pool = v_pool.at[page_idx, off].set(v_new[:, 0])
+    return k_pool, v_pool
+
+
+def paged_gather(pool, pages):
+    """Gather each slot's pages into a contiguous (B, npp * ps, KV, hd)
+    cache view. Positions past a slot's written length read stale pool
+    data (or the trash page) — harmless, because `decode_attention`'s
+    `idx < pos` mask gives them exactly-zero softmax weight."""
+    b, npp = pages.shape
+    _, ps, kv, hd = pool.shape
+    return pool[pages].reshape(b, npp * ps, kv, hd)
+
+
+def paged_decode_attention(q, k_pool, v_pool, pos, pages, *, n_kv: int):
+    """`decode_attention` against the shared pool: gather-through-table,
+    then the standard masked path — bit-identical to the private-cache
+    result for any slot whose pages hold the same K/V rows."""
+    kg = paged_gather(k_pool, pages)
+    vg = paged_gather(v_pool, pages)
+    return decode_attention(q, kg, vg, pos, n_kv=n_kv)
+
+
+def copy_page(pool, src, dst):
+    """Device page copy (COW fork): pool[dst] = pool[src]."""
+    return pool.at[dst].set(pool[src])
+
+
+def zero_pages(pool, pages):
+    """Scrub the listed pages (NaN-corruption recovery: masked attention
+    zeroes stale *weights*, but 0 * NaN is still NaN, so pages freed from
+    a corrupted slot must be cleaned before reuse)."""
+    return pool.at[jnp.asarray(pages)].set(jnp.zeros((), pool.dtype))

@@ -154,9 +154,19 @@ def attn_cache_specs(cfg, B: int, cache_len: int) -> dict:
     }
 
 
+def _paged(ctx, window) -> bool:
+    """Route this block's K/V through the shared page pool? Only when the
+    session threads a page table in `ctx` and the cache is positional
+    (rolling SWA buffers stay private — their `pos % window` addressing is
+    its own paging scheme)."""
+    return ctx.get("pages") is not None and not window
+
+
 def attn_block_decode(cfg, p, x, cache, pos, ctx, *, window=None):
     window = window if window is not None else cfg.window
-    rolling = bool(window) and cache["k"].shape[1] < ctx["max_seq"]
+    paged = _paged(ctx, window)
+    rolling = (not paged and bool(window)
+               and cache["k"].shape[1] < ctx["max_seq"])
     if _fused_rms(cfg):
         q, k, v = _fused_qkv(cfg, p, x, ctx)
     else:
@@ -166,10 +176,17 @@ def attn_block_decode(cfg, p, x, cache, pos, ctx, *, window=None):
                               qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
                               rope=ctx.get("rope", True),
                               theta=cfg.rope_theta)
-    kc, vc = attn_lib.update_cache(cache["k"], cache["v"], k, v, pos,
-                                   rolling=rolling)
-    o = attn_lib.decode_attention(q, kc, vc, pos + 1, n_kv=cfg.n_kv_heads,
-                                  window=window, rolling=rolling)
+    if paged:
+        kc, vc = attn_lib.paged_update_cache(cache["k"], cache["v"], k, v,
+                                             pos, ctx["pages"])
+        o = attn_lib.paged_decode_attention(q, kc, vc, pos + 1, ctx["pages"],
+                                            n_kv=cfg.n_kv_heads)
+    else:
+        kc, vc = attn_lib.update_cache(cache["k"], cache["v"], k, v, pos,
+                                       rolling=rolling)
+        o = attn_lib.decode_attention(q, kc, vc, pos + 1,
+                                      n_kv=cfg.n_kv_heads,
+                                      window=window, rolling=rolling)
     if _fused_rms(cfg):
         x = _fused_out_residual(p, o, x)
     else:
@@ -315,16 +332,24 @@ def moe_block_apply(cfg, p, x, ctx):
 
 
 def moe_block_decode(cfg, p, x, cache, pos, ctx):
-    rolling = bool(cfg.window) and cache["k"].shape[1] < ctx["max_seq"]
+    paged = _paged(ctx, cfg.window)
+    rolling = (not paged and bool(cfg.window)
+               and cache["k"].shape[1] < ctx["max_seq"])
     q, k, v = qkv_project(p["attn"], _norm(cfg, p, "ln_attn", x),
                           ctx["positions"], n_heads=cfg.n_heads,
                           n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
                           qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
                           theta=cfg.rope_theta)
-    kc, vc = attn_lib.update_cache(cache["k"], cache["v"], k, v, pos,
-                                   rolling=rolling)
-    o = attn_lib.decode_attention(q, kc, vc, pos + 1, n_kv=cfg.n_kv_heads,
-                                  window=cfg.window, rolling=rolling)
+    if paged:
+        kc, vc = attn_lib.paged_update_cache(cache["k"], cache["v"], k, v,
+                                             pos, ctx["pages"])
+        o = attn_lib.paged_decode_attention(q, kc, vc, pos + 1, ctx["pages"],
+                                            n_kv=cfg.n_kv_heads)
+    else:
+        kc, vc = attn_lib.update_cache(cache["k"], cache["v"], k, v, pos,
+                                       rolling=rolling)
+        o = attn_lib.decode_attention(q, kc, vc, pos + 1, n_kv=cfg.n_kv_heads,
+                                      window=cfg.window, rolling=rolling)
     x = x + out_project(p["attn"], o)
     y, _ = moe_apply(cfg, p["moe"], _norm(cfg, p, "ln_ffn", x))
     return x + y, {"k": kc, "v": vc}
@@ -454,8 +479,15 @@ def attn_cross_block_decode(cfg, p, x, cache, pos, ctx):
                           ctx["positions"], n_heads=cfg.n_heads,
                           n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
                           qkv_bias=cfg.qkv_bias, rope=False)
-    kc, vc = attn_lib.update_cache(cache["self_k"], cache["self_v"], k, v, pos)
-    o = attn_lib.decode_attention(q, kc, vc, pos + 1, n_kv=cfg.n_kv_heads)
+    if _paged(ctx, None):
+        kc, vc = attn_lib.paged_update_cache(cache["self_k"], cache["self_v"],
+                                             k, v, pos, ctx["pages"])
+        o = attn_lib.paged_decode_attention(q, kc, vc, pos + 1, ctx["pages"],
+                                            n_kv=cfg.n_kv_heads)
+    else:
+        kc, vc = attn_lib.update_cache(cache["self_k"], cache["self_v"],
+                                       k, v, pos)
+        o = attn_lib.decode_attention(q, kc, vc, pos + 1, n_kv=cfg.n_kv_heads)
     x = x + out_project(p["self"], o)
     h = _ln(cfg, p, "ln_cross", x)
     qc = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"])

@@ -211,6 +211,235 @@ def nan_cache_slots(cache):
 
 
 # ----------------------------------------------------------------------------
+# Paged decode cache — the shared-pool layout (runtime/kvpool.py)
+# ----------------------------------------------------------------------------
+#
+# Under a paged session the positional K/V leaves stop being per-slot
+# rectangles (B, L, KV, hd) and become ONE shared pool (n_pages, page_size,
+# KV, hd) addressed through per-slot page tables (`ctx["pages"]` in the
+# decode step). Rolling-window buffers and recurrent block states are not
+# pageable — their `pos % window` addressing / dense state is a layout of
+# its own — so they stay private (B, ...) leaves; the two kinds coexist in
+# one cache pytree and every per-slot op below routes each leaf by a
+# structural mask.
+
+def _kind_paged(cfg, kind: str) -> bool:
+    """Does this block kind route K/V through the pool? Mirrors the
+    `_paged(ctx, window)` gate in blocks.py: positional attention pages,
+    windowed attention stays a private rolling buffer."""
+    if kind in ("attn", "attn_moe"):
+        return not cfg.window
+    return kind == "attn_cross"        # self_k/self_v (cross_* is static)
+
+
+def _pageable_leaf(spec: ParamSpec) -> bool:
+    return tuple(spec.logical[:2]) == ("batch", "kv_seq")
+
+
+def _paged_kind_specs(cfg, kind: str, B: int, cache_len: int,
+                      n_pages: int, page_size: int):
+    specs = BLOCKS[kind]["cache"](cfg, B, cache_len)
+    if not _kind_paged(cfg, kind):
+        return specs
+
+    def one(s: ParamSpec) -> ParamSpec:
+        if not _pageable_leaf(s):
+            return s
+        return ParamSpec((n_pages, page_size, *s.shape[2:]),
+                         (None, None, *s.logical[2:]), s.dtype, s.init,
+                         s.scale)
+
+    return jax.tree.map(one, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def paged_cache_specs(cfg, B: int, cache_len: int, *, n_pages: int,
+                      page_size: int) -> dict:
+    """`cache_specs` with every pageable K/V leaf replaced by the shared
+    pool (n_pages, page_size, KV, hd); stacked super-blocks carry the
+    usual leading layers axis, i.e. (n_super, n_pages, ps, KV, hd)."""
+    pattern, n_super, remainder = block_plan(cfg)
+    kinds = pattern + remainder
+    if not any(_kind_paged(cfg, k) and any(
+            _pageable_leaf(s) for s in jax.tree.leaves(
+                BLOCKS[k]["cache"](cfg, B, cache_len),
+                is_leaf=lambda x: isinstance(x, ParamSpec)))
+            for k in kinds):
+        raise ValueError(
+            f"arch {cfg.name!r} has no pageable KV leaves (recurrent or "
+            f"fully windowed) — paged serving needs positional attention")
+    specs: dict[str, Any] = {"blocks": {
+        f"sub{i}": _stack(_paged_kind_specs(cfg, k, B, cache_len,
+                                            n_pages, page_size), n_super)
+        for i, k in enumerate(pattern)}}
+    if remainder:
+        specs["rem"] = {f"rem{i}": _paged_kind_specs(cfg, k, B, cache_len,
+                                                     n_pages, page_size)
+                        for i, k in enumerate(remainder)}
+    return specs
+
+
+def paged_cache_mask(cfg, B: int, cache_len: int) -> dict:
+    """Same tree structure as the cache, True on pool leaves — the routing
+    fact every paged per-slot op shares."""
+    pattern, n_super, remainder = block_plan(cfg)
+
+    def mask_tree(kind: str):
+        paged = _kind_paged(cfg, kind)
+        return jax.tree.map(lambda s: paged and _pageable_leaf(s),
+                            BLOCKS[kind]["cache"](cfg, B, cache_len),
+                            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    mask: dict[str, Any] = {"blocks": {f"sub{i}": mask_tree(k)
+                                       for i, k in enumerate(pattern)}}
+    if remainder:
+        mask["rem"] = {f"rem{i}": mask_tree(k)
+                       for i, k in enumerate(remainder)}
+    return mask
+
+
+def abstract_paged_cache(cfg, B: int, cache_len: int, *, n_pages: int,
+                         page_size: int):
+    specs = paged_cache_specs(cfg, B, cache_len, n_pages=n_pages,
+                              page_size=page_size)
+    return abstract_tree(specs), logical_tree(specs)
+
+
+def init_paged_cache(cfg, B: int, cache_len: int, *, n_pages: int,
+                     page_size: int):
+    return init_tree(paged_cache_specs(cfg, B, cache_len, n_pages=n_pages,
+                                       page_size=page_size),
+                     jax.random.PRNGKey(0))
+
+
+def make_paged_cache_ops(cfg, B: int, cache_len: int):
+    """The per-slot / per-page device ops of a paged cache, routed by the
+    pool mask. Returned as a dict of pure functions (the engine wrappers
+    jit them):
+
+    * ``zero_slots(cache, mask)`` — refill zeroing of *private* leaves
+      only (recurrent/rolling state must not leak across requests);
+      pool pages are deliberately NOT zeroed — stale page data is masked
+      out by decode attention, which is the point of paged refill.
+    * ``nan_slots(cache, tables)`` — (B,) any-NaN per slot; private
+      leaves by batch row, pool leaves via the slot's page table
+      (trash-page entries ignored so one poisoned slot cannot flag
+      every retired neighbour).
+    * ``corrupt_slots(cache, mask, tables)`` — NaN-fill masked slots:
+      private float rows directly, pool pages via a scatter of the
+      masked slots' table entries.
+    * ``copy_pages(cache, src, dst)`` — pool page copy (the COW fork).
+    * ``zero_pages(cache, pages)`` — pool page scrub (NaN quarantine).
+    """
+    mask = paged_cache_mask(cfg, B, cache_len)
+
+    def _map(cache, fn_for):
+        out = {"blocks": jax.tree.map(lambda c, m: fn_for(1, m)(c),
+                                      cache["blocks"], mask["blocks"])}
+        if "rem" in cache:
+            out["rem"] = jax.tree.map(lambda c, m: fn_for(0, m)(c),
+                                      cache["rem"], mask["rem"])
+        return out
+
+    def zero_slots(cache, slot_mask):
+        def fn_for(axis, paged):
+            if paged:
+                return lambda c: c
+            def one(c):
+                shape = [1] * c.ndim
+                shape[axis] = slot_mask.shape[0]
+                return jnp.where(slot_mask.reshape(shape),
+                                 jnp.zeros((), c.dtype), c)
+            return one
+        return _map(cache, fn_for)
+
+    def nan_slots(cache, tables):
+        flags = []
+        live = tables != 0                       # TRASH_PAGE entries
+
+        def fn_for(axis, paged):
+            def one(c):
+                if not jnp.issubdtype(c.dtype, jnp.inexact):
+                    return c
+                if paged:
+                    # page axis sits where the batch axis would (the
+                    # layers axis, if any, still leads)
+                    axes = tuple(i for i in range(c.ndim) if i != axis)
+                    per_page = jnp.any(jnp.isnan(c), axis=axes)
+                    flags.append(jnp.any(per_page[tables] & live, axis=1))
+                else:
+                    axes = tuple(i for i in range(c.ndim) if i != axis)
+                    flags.append(jnp.any(jnp.isnan(c), axis=axes))
+                return c
+            return one
+
+        _map(cache, fn_for)
+        out = flags[0]
+        for f in flags[1:]:
+            out = out | f
+        return out
+
+    def corrupt_slots(cache, slot_mask, tables):
+        import math
+        n_hit = None
+
+        def fn_for(axis, paged):
+            def one(c):
+                nonlocal n_hit
+                if not jnp.issubdtype(c.dtype, jnp.inexact):
+                    return c
+                nan = jnp.asarray(float("nan"), c.dtype)
+                if paged:
+                    n_pages = c.shape[axis]
+                    if n_hit is None or n_hit.shape[0] != n_pages:
+                        hit0 = jnp.zeros((n_pages,), bool)
+                        n_hit = hit0.at[tables].max(
+                            slot_mask[:, None] & (tables != 0))
+                    shape = [1] * c.ndim
+                    shape[axis] = n_pages
+                    return jnp.where(n_hit.reshape(shape), nan, c)
+                shape = [1] * c.ndim
+                shape[axis] = slot_mask.shape[0]
+                return jnp.where(slot_mask.reshape(shape), nan, c)
+            return one
+
+        del math
+        return _map(cache, fn_for)
+
+    def copy_pages(cache, src, dst):
+        s = jnp.asarray(src, jnp.int32)
+        d = jnp.asarray(dst, jnp.int32)
+
+        def fn_for(axis, paged):
+            def one(c):
+                if not paged:
+                    return c
+                if axis == 1:
+                    return c.at[:, d].set(c[:, s])
+                return c.at[d].set(c[s])
+            return one
+        return _map(cache, fn_for)
+
+    def zero_pages(cache, pages):
+        idx = jnp.asarray(pages, jnp.int32)
+
+        def fn_for(axis, paged):
+            def one(c):
+                if not paged:
+                    return c
+                zero = jnp.zeros((), c.dtype)
+                if axis == 1:
+                    return c.at[:, idx].set(zero)
+                return c.at[idx].set(zero)
+            return one
+        return _map(cache, fn_for)
+
+    return {"zero_slots": zero_slots, "nan_slots": nan_slots,
+            "corrupt_slots": corrupt_slots, "copy_pages": copy_pages,
+            "zero_pages": zero_pages}
+
+
+# ----------------------------------------------------------------------------
 # Forward
 # ----------------------------------------------------------------------------
 
@@ -440,7 +669,7 @@ def make_decode_step(cfg, max_seq: int = 1 << 30, *, policy=None):
             positions = pos[:, None]
         positions = positions.astype(jnp.int32)
         ctx = {"positions": positions, "rope": cfg.family != "encdec",
-               "max_seq": max_seq}
+               "max_seq": max_seq, "pages": batch.get("pages")}
 
         def super_body(x, scanned):
             layer_params, layer_cache = scanned

@@ -262,15 +262,21 @@ class DecodeEngine:
 # ----------------------------------------------------------------------------
 
 
-def init_session_state(cache, n_slots: int, max_prompt: int) -> dict:
+def init_session_state(cache, n_slots: int, max_prompt: int,
+                       pages_per_slot: int | None = None) -> dict:
     """Fresh device state for a ServeSession's slot pool (all slots idle).
 
     The state is one pytree so the whole pool is donated through every
     chunk: steady-state serving re-uses the same device buffers no matter
     how many requests cycle through the slots.
+
+    `pages_per_slot` (paged KV sessions only) adds the per-slot page
+    tables: a (B, pages_per_slot) int32 row per slot, all entries starting
+    at the reserved trash page 0 so an idle slot's scatter-writes land
+    where nobody reads.
     """
     i32 = lambda *s: jnp.zeros(s, jnp.int32)
-    return {
+    state = {
         "cache": cache,
         "tok": i32(n_slots, 1),                # last sampled token per slot
         "pos": i32(n_slots),                   # per-slot decode position
@@ -283,6 +289,9 @@ def init_session_state(cache, n_slots: int, max_prompt: int) -> dict:
         "active": jnp.zeros((n_slots,), bool),
         "age": i32(n_slots),                   # admissions seen by the slot
     }
+    if pages_per_slot is not None:
+        state["pages"] = i32(n_slots, pages_per_slot)
+    return state
 
 
 def session_chunk_fn(decode_step: Callable, chunk: int,
@@ -325,8 +334,11 @@ def session_chunk_fn(decode_step: Callable, chunk: int,
 
             def run(operand):
                 cache, tok = operand
+                batch = {"tokens": tok, "pos": s["pos"]}
+                if "pages" in s:        # paged KV: per-slot page tables
+                    batch["pages"] = s["pages"]
                 return decode_step(params, cache,
-                                   {"tokens": tok, "pos": s["pos"]})
+                                   batch)
 
             def skip(operand):
                 return operand
@@ -411,6 +423,102 @@ def make_session_refill(*, cache_zero: Callable | None = None,
         )
 
     return jax.jit(refill, donate_argnums=(0,) if donate else ())
+
+
+def make_paged_session_refill(*, cache_zero: Callable,
+                              donate: bool = True) -> Callable:
+    """The paged-KV refill program: `refill(state, admit, release,
+    prompt_buf, prompt_len, budget, pages, start) -> state`.
+
+    Differences from `make_session_refill`:
+
+    * `pages` (B, pages_per_slot) installs each admitted slot's page
+      table row; released slots' rows are re-pointed at the trash page
+      (0) so their frozen-position scatter-writes can never corrupt a
+      page that has been reallocated;
+    * `start` (B,) is the admitted slot's initial position/consumed
+      count — non-zero exactly when shared prefix pages cover the first
+      `start` prompt tokens, i.e. the prefill-skip that collapses TTFT;
+    * `cache_zero` must be the *paged-aware* zero (`make_paged_cache_ops`
+      ["zero_slots"]): only private (recurrent/rolling) leaves are
+      zeroed — pool pages are left as-is, which is the point: refill is
+      a table install, not a cache wipe.
+    """
+
+    def refill(state, admit, release, prompt_buf, prompt_len, budget,
+               pages, start):
+        start = start.astype(jnp.int32)
+        pick = lambda new, old: jnp.where(admit, new, old)
+        new_pages = jnp.where(admit[:, None], pages,
+                              jnp.where(release[:, None], 0,
+                                        state["pages"]))
+        return dict(
+            state,
+            cache=cache_zero(state["cache"], admit),
+            tok=jnp.where(admit[:, None], 0, state["tok"]),
+            pos=pick(start, state["pos"]),
+            consumed=pick(start, state["consumed"]),
+            emitted=pick(jnp.zeros_like(state["emitted"]),
+                         state["emitted"]),
+            finished=jnp.where(admit, False, state["finished"]),
+            active=(state["active"] & ~release) | admit,
+            age=state["age"] + admit,
+            prompt_buf=jnp.where(admit[:, None], prompt_buf,
+                                 state["prompt_buf"]),
+            prompt_len=pick(prompt_len, state["prompt_len"]),
+            budget=pick(budget, state["budget"]),
+            pages=new_pages,
+        )
+
+    return jax.jit(refill, donate_argnums=(0,) if donate else ())
+
+
+def make_paged_nan_scan(cache_nan: Callable) -> Callable:
+    """Paged corruption sentinel: `nan_scan(state) -> (B,) bool`.
+    `cache_nan(cache, tables)` is `make_paged_cache_ops["nan_slots"]` —
+    pool leaves are attributed to slots through the page tables."""
+
+    def nan_scan(state):
+        return cache_nan(state["cache"], state["pages"])
+
+    return jax.jit(nan_scan)
+
+
+def make_paged_slot_corrupt(cache_corrupt: Callable,
+                            donate: bool = True) -> Callable:
+    """Paged fault-injection write: `corrupt(state, mask) -> state` NaNs
+    the masked slots' private rows *and* their table-addressed pool
+    pages (`make_paged_cache_ops["corrupt_slots"]`)."""
+
+    def corrupt(state, mask):
+        return dict(state, cache=cache_corrupt(state["cache"], mask,
+                                               state["pages"]))
+
+    return jax.jit(corrupt, donate_argnums=(0,) if donate else ())
+
+
+def make_page_copy(cache_copy: Callable, donate: bool = True) -> Callable:
+    """Pool page copy: `page_copy(state, src, dst) -> state` (the COW
+    fork's device half — `src`/`dst` are equal-length page-id vectors).
+    Retraces per distinct copy count; forks are rare (one per exact
+    full-prefix hit) and almost always a single page."""
+
+    def page_copy(state, src, dst):
+        return dict(state, cache=cache_copy(state["cache"], src, dst))
+
+    return jax.jit(page_copy, donate_argnums=(0,) if donate else ())
+
+
+def make_page_scrub(cache_scrub: Callable, donate: bool = True) -> Callable:
+    """Pool page scrub: `page_scrub(state, pages) -> state` zeroes the
+    listed pages in every pool leaf. Runs only on pages freed from a
+    corrupted slot — NaN is the one thing masked attention cannot hide
+    (0 * NaN poisons the gathered V row)."""
+
+    def page_scrub(state, pages):
+        return dict(state, cache=cache_scrub(state["cache"], pages))
+
+    return jax.jit(page_scrub, donate_argnums=(0,) if donate else ())
 
 
 # ----------------------------------------------------------------------------

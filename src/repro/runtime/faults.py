@@ -27,6 +27,11 @@ Fault kinds (all fire exactly once, at their scripted chunk):
   that was running.
 * ``refill_error`` — the refill program raises at chunk boundary N. The
   session un-admits the round and retries at the next boundary.
+* ``page_alloc_fail`` — every paged-KV page allocation at chunk boundary
+  N reports `PoolExhausted` (runtime/kvpool.py). Recovery is the typed
+  shed/requeue path: the affected admissions are un-admitted and requeued
+  at the front of their class — no crash, no token loss — and the
+  session's `stats()["kv"]["pool_exhausted"]` counter records the event.
 
 The plan is injected per-session (``program.open(faults=plan)`` or the
 ``faults=`` constructor argument) and threaded through the driver as
@@ -37,7 +42,8 @@ from __future__ import annotations
 
 import dataclasses
 
-KINDS = ("kill_slot", "corrupt_nan", "wedge", "refill_error")
+KINDS = ("kill_slot", "corrupt_nan", "wedge", "refill_error",
+         "page_alloc_fail")
 
 
 class InjectedFault(RuntimeError):
@@ -124,6 +130,9 @@ class FaultPlan:
     def refill_error(self, at_chunk: int) -> "FaultPlan":
         return self.add("refill_error", at_chunk)
 
+    def page_alloc_fail(self, at_chunk: int) -> "FaultPlan":
+        return self.add("page_alloc_fail", at_chunk)
+
     # -- driver queries (each consumes the fault it matches) -------------
     def _take(self, kind: str, chunk: int) -> list[Fault]:
         out = []
@@ -146,6 +155,11 @@ class FaultPlan:
     def wedged(self, chunk: int) -> bool:
         """True when this chunk's device wait must never complete."""
         return bool(self._take("wedge", chunk))
+
+    def page_alloc_failed(self, boundary: int) -> bool:
+        """True when page allocation at this chunk boundary is scripted
+        to report `PoolExhausted` (paged-KV sessions only)."""
+        return bool(self._take("page_alloc_fail", boundary))
 
     def check_refill(self, boundary: int) -> None:
         """Raises `InjectedFault` when the refill at this chunk boundary

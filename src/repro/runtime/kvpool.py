@@ -1,0 +1,417 @@
+"""Shared paged KV pool — the software shared-L1 for serving slots.
+
+MemPool's defining choice is that 256 PEs share one global, multi-banked
+L1 scratchpad instead of owning private slices (arXiv 2303.17742); a
+core's working set lives wherever a bank is free, and the interconnect
+makes every bank one hop away. The serving analogue built here: the model
+KV cache stops being a private per-slot rectangle and becomes ONE global
+pool of fixed-size KV pages ("banks"). Each slot owns only a small page
+table; attention reads/writes are routed through it on device
+(`models/attention.paged_update_cache` / `paged_gather`), and slot refill
+becomes page allocation + table install instead of a full cache-zero
+pass.
+
+Three host-side pieces live in this module:
+
+* `PagePool` — the allocator: a free list over pages `1..n_pages-1`
+  (page 0 is the reserved *trash page*, see below) with per-page
+  refcounts. `alloc` raises the typed `PoolExhausted` so the session can
+  requeue instead of crash; `release` decrements and returns the pages
+  that actually became free.
+* `PrefixCache` — copy-on-write prefix sharing. Completed requests
+  publish their *fully written* prompt pages keyed by a rolling hash of
+  page-aligned token prefixes; a later request with the same preamble
+  maps those pages read-only (refcount++) and skips their prefill
+  entirely — the TTFT collapse for shared system prompts. A shared page
+  is never written: the session skips exactly the tokens the shared
+  pages cover, so writes land at positions >= the shared region. The one
+  exception is an exact full-prompt hit, where the last prompt token
+  must still be re-fed (its output is the first sampled token) and would
+  write inside a shared page — that page is COW-forked: a fresh page is
+  allocated and the shared page's contents device-copied before install.
+* `PagedKV` — the per-session façade the `ServeSession` driver talks to:
+  `admit(slot, prompt, max_new)` builds the slot's table row (shared +
+  fresh pages, prefill-skip count, pending COW copies), `release(slot)`
+  returns everything and re-points the row at the trash page, and
+  `stats()` reports pool occupancy / pages shared / prefill tokens
+  skipped for the serving report.
+
+Why a trash page: the session cell steps ALL slots whenever any slot is
+live (`engine.session_chunk_fn`), so a finished slot keeps scatter-
+writing K/V at its frozen position every chunk. Its released pages may
+already belong to another request, so release must re-point the dead
+slot's table at a page nobody reads — page 0. Reads from stale/garbage
+pages are harmless (masked attention gives them exactly-zero softmax
+weight); only NaN survives the mask (0 * NaN), which is why pages freed
+from a corrupted slot are scrubbed on device before reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Typed allocation failure: the pool has fewer free pages than the
+    request needs. Carries the shortfall so the scheduler can reason
+    about it (requeue / shed) instead of crashing the session."""
+
+    def __init__(self, needed: int, free: int):
+        super().__init__(f"KV pool exhausted: need {needed} pages, "
+                         f"{free} free")
+        self.needed = needed
+        self.free = free
+
+
+class PagePool:
+    """Free-list page allocator with per-page refcounts.
+
+    Pages are integer ids in `[1, n_pages)`; page 0 is the reserved trash
+    page and is never handed out. A page's refcount is the number of slot
+    tables + prefix-cache entries pointing at it; `release` only frees a
+    page when the count hits zero (shared prefix pages survive their
+    first owner).
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError(f"n_pages must be >= 2 (page 0 is reserved), "
+                             f"got {n_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.refcount = np.zeros(n_pages, np.int32)
+        self.refcount[TRASH_PAGE] = 1          # pinned forever
+        self._free: list[int] = list(range(n_pages - 1, 0, -1))
+        # pages that may hold NaN (freed from a corrupted slot); the
+        # session scrubs these on device before they are handed out again
+        self.dirty: set[int] = set()
+        self.allocs = 0
+        self.alloc_failures = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        """Take `n` fresh pages (refcount 1 each) or raise `PoolExhausted`
+        without taking any."""
+        if n < 0:
+            raise ValueError(f"alloc of {n} pages")
+        if n > len(self._free):
+            self.alloc_failures += 1
+            raise PoolExhausted(n, len(self._free))
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self.refcount[p] == 0, f"page {p} double-allocated"
+            self.refcount[p] = 1
+        self.allocs += n
+        return pages
+
+    def ref(self, pages) -> None:
+        """Add one reference to each page (prefix-cache share)."""
+        for p in pages:
+            if p == TRASH_PAGE:
+                continue
+            assert self.refcount[p] > 0, f"ref of free page {p}"
+            self.refcount[p] += 1
+
+    def release(self, pages) -> list[int]:
+        """Drop one reference per page; returns the pages that became
+        free (refcount hit zero) in release order."""
+        freed = []
+        for p in pages:
+            if p == TRASH_PAGE:
+                continue
+            assert self.refcount[p] > 0, f"release of free page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+    def mark_dirty(self, pages) -> None:
+        self.dirty.update(int(p) for p in pages if p != TRASH_PAGE)
+
+    def take_dirty_free(self) -> list[int]:
+        """Dirty pages that are currently free — the scrub set. Clears
+        the returned pages' dirty marks."""
+        out = [p for p in sorted(self.dirty) if self.refcount[p] == 0]
+        self.dirty.difference_update(out)
+        return out
+
+    def stats(self) -> dict:
+        return {"n_pages": self.n_pages, "page_size": self.page_size,
+                "used_pages": self.used_pages,
+                "free_pages": self.free_pages,
+                "occupancy_pct": 100.0 * self.used_pages /
+                max(self.n_pages - 1, 1),
+                "allocs": self.allocs,
+                "alloc_failures": self.alloc_failures}
+
+
+def _page_key(prev_key: bytes, tokens: np.ndarray) -> bytes:
+    """Rolling hash chain: key of page k = H(key of page k-1 || tokens)."""
+    h = hashlib.blake2b(prev_key, digest_size=16)
+    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+    return h.digest()
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    page: int
+    tokens: np.ndarray     # the page's token content (page_size,)
+    hits: int = 0
+
+
+class PrefixCache:
+    """Hash-chained map from page-aligned token prefixes to pool pages.
+
+    `insert(tokens, pages)` publishes the fully written prompt pages of a
+    completed request (each gains a cache reference so it outlives its
+    owner); `match(tokens)` walks the chain and returns the longest run
+    of shared pages covering a prefix of `tokens`. Entries are evicted
+    LRU-ish via `evict(n_pages)` when the pool runs dry.
+    """
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self._chain: dict[bytes, _PrefixEntry] = {}
+        self._order: list[bytes] = []          # insertion order for evict
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._chain)
+
+    def insert(self, tokens: np.ndarray, pages) -> int:
+        """Publish the fully covered prompt pages. Returns how many new
+        pages were published (already-cached prefixes are skipped)."""
+        ps = self.pool.page_size
+        tokens = np.asarray(tokens, np.int32)
+        n_full = min(tokens.size // ps, len(pages))
+        key = b"root"
+        published = 0
+        for k in range(n_full):
+            page_toks = tokens[k * ps:(k + 1) * ps]
+            key = _page_key(key, page_toks)
+            if key in self._chain:
+                continue                        # prefix already published
+            page = int(pages[k])
+            if page == TRASH_PAGE:
+                break
+            self.pool.ref([page])
+            self._chain[key] = _PrefixEntry(page, page_toks.copy())
+            self._order.append(key)
+            published += 1
+        return published
+
+    def match(self, tokens: np.ndarray) -> list[int]:
+        """Longest chain of cached pages covering a prefix of `tokens`
+        (bit-exact token match, not just hash match). Bumps refcounts is
+        NOT done here — the caller refs the pages it actually installs."""
+        ps = self.pool.page_size
+        tokens = np.asarray(tokens, np.int32)
+        key = b"root"
+        out: list[int] = []
+        for k in range(tokens.size // ps):
+            page_toks = tokens[k * ps:(k + 1) * ps]
+            key = _page_key(key, page_toks)
+            e = self._chain.get(key)
+            if e is None or not np.array_equal(e.tokens, page_toks):
+                break
+            e.hits += 1
+            out.append(e.page)
+        if out:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return out
+
+    def evict(self, n_pages: int) -> list[int]:
+        """Drop cache references until `n_pages` pages were freed (or the
+        cache is empty). Returns the freed page ids."""
+        freed: list[int] = []
+        while self._order and len(freed) < n_pages:
+            key = self._order.pop(0)
+            e = self._chain.pop(key)
+            freed += self.pool.release([e.page])
+        return freed
+
+    def clear(self) -> list[int]:
+        return self.evict(len(self._chain))
+
+
+@dataclasses.dataclass
+class SlotAlloc:
+    """What `PagedKV.admit` hands the session for one slot."""
+
+    table: np.ndarray            # (pages_per_slot,) int32 page ids
+    prefill_skip: int            # prompt tokens covered by shared pages
+    shared_pages: int            # pages mapped read-only from the cache
+    cow_copies: list[tuple[int, int]]   # (src, dst) device page copies
+
+
+class PagedKV:
+    """Per-session paged-KV manager: pool + prefix cache + slot tables.
+
+    The session driver calls `admit` at refill boundaries (may raise
+    `PoolExhausted` — the request stays queued), `release` whenever a
+    slot retires (done, cancelled, shed, killed, quarantined), and
+    `publish` when a request completes cleanly to seed the prefix cache.
+    All bookkeeping is host-side numpy; the device only ever sees the
+    int32 table rows.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 pages_per_slot: int, *, prefix_cache: bool = True):
+        self.pool = PagePool(n_pages, page_size)
+        self.prefix = PrefixCache(self.pool) if prefix_cache else None
+        self.n_slots = int(n_slots)
+        self.pages_per_slot = int(pages_per_slot)
+        # owned: the references this slot must drop on release (includes a
+        # COW fork's source page, which stays alive while the copy is
+        # pending); table: the page ids the device actually addresses.
+        self._slot_owned: list[list[int]] = [[] for _ in range(n_slots)]
+        self._slot_table: list[list[int]] = [[] for _ in range(n_slots)]
+        self._slot_prompt: list[np.ndarray | None] = [None] * n_slots
+        # counters for stats()
+        self.pages_shared_total = 0
+        self.prefill_skipped_tokens = 0
+        self.cow_forks = 0
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, slot: int, prompt: np.ndarray,
+              max_new: int) -> SlotAlloc:
+        """Build slot's page table for `prompt` + up to `max_new` output
+        tokens. Shared prefix pages are mapped read-only; the remainder
+        is freshly allocated. Raises `PoolExhausted` (allocating nothing)
+        when the pool cannot cover the fresh pages even after evicting
+        prefix-cache entries."""
+        assert not self._slot_owned[slot], f"slot {slot} already mapped"
+        ps = self.pool.page_size
+        prompt = np.asarray(prompt, np.int32)
+        total_tokens = prompt.size + max_new
+        n_total = -(-total_tokens // ps)       # ceil
+        if n_total > self.pages_per_slot:
+            raise ValueError(
+                f"request needs {n_total} pages > pages_per_slot "
+                f"{self.pages_per_slot} (prompt {prompt.size} + "
+                f"max_new {max_new}, page_size {ps})")
+
+        shared = self.prefix.match(prompt) if self.prefix else []
+        # the final prompt token must be re-fed (its forward pass emits
+        # the first sampled token), so never skip the whole prompt; an
+        # exact full-coverage hit COW-forks the page the re-fed token
+        # writes into.
+        skip = min(len(shared) * ps, max(prompt.size - 1, 0))
+        fork_last = bool(shared) and len(shared) * ps > skip
+        n_fresh = n_total - len(shared) + (1 if fork_last else 0)
+
+        # hold the matched pages across a possible eviction (the prefix
+        # cache may otherwise free exactly the pages we are about to map)
+        self.pool.ref(shared)
+        try:
+            fresh = self.pool.alloc(n_fresh)
+        except PoolExhausted:
+            if self.prefix is not None:
+                self.prefix.evict(n_fresh - self.pool.free_pages)
+            try:
+                fresh = self.pool.alloc(n_fresh)
+            except PoolExhausted:
+                self.pool.release(shared)       # allocate-nothing contract
+                raise
+
+        cow: list[tuple[int, int]] = []
+        mapped = list(shared)
+        if fork_last:
+            src, dst = mapped[-1], fresh[0]
+            mapped[-1] = dst                    # table points at the copy;
+            cow.append((src, dst))              # src stays owned (ref held)
+            self.cow_forks += 1
+        pages = mapped + fresh[(1 if fork_last else 0):]
+        table = np.full(self.pages_per_slot, TRASH_PAGE, np.int32)
+        table[:len(pages)] = pages
+        self._slot_owned[slot] = shared + fresh
+        self._slot_table[slot] = pages
+        self._slot_prompt[slot] = prompt
+        self.pages_shared_total += len(shared)
+        self.prefill_skipped_tokens += skip
+        return SlotAlloc(table=table, prefill_skip=skip,
+                         shared_pages=len(shared), cow_copies=cow)
+
+    # -- retirement ----------------------------------------------------------
+    def publish(self, slot: int) -> int:
+        """Seed the prefix cache with the slot's fully written prompt
+        pages (call on clean request completion, before `release`)."""
+        if self.prefix is None or self._slot_prompt[slot] is None:
+            return 0
+        return self.prefix.insert(self._slot_prompt[slot],
+                                  self._slot_table[slot])
+
+    def release(self, slot: int, *, dirty: bool = False) -> list[int]:
+        """Return the slot's pages to the pool (shared pages survive as
+        long as other references remain). `dirty=True` marks the freed
+        pages for a device scrub before reuse (NaN corruption). Returns
+        the freed page ids."""
+        owned = self._slot_owned[slot]
+        self._slot_owned[slot] = []
+        self._slot_table[slot] = []
+        self._slot_prompt[slot] = None
+        freed = self.pool.release(owned)
+        if dirty:
+            self.pool.mark_dirty(freed)
+        return freed
+
+    def reset(self) -> None:
+        """Forget everything (wedge recovery: the device pool was rebuilt
+        from scratch, so every table, page, and prefix entry is void)."""
+        for s in range(self.n_slots):
+            self._slot_owned[s] = []
+            self._slot_table[s] = []
+            self._slot_prompt[s] = None
+        self.pool = PagePool(self.pool.n_pages, self.pool.page_size)
+        if self.prefix is not None:
+            self.prefix = PrefixCache(self.pool)
+
+    def slot_pages(self, slot: int) -> list[int]:
+        """The page ids the slot's device table addresses (table order)."""
+        return list(self._slot_table[slot])
+
+    def match_len(self, prompt) -> int:
+        """Reusable-prefix length in tokens — the scheduler's page-level
+        admission score (peek only: no refcounts, no hit accounting)."""
+        if self.prefix is None:
+            return 0
+        ps = self.pool.page_size
+        tokens = np.asarray(prompt, np.int32)
+        key, n = b"root", 0
+        for k in range(tokens.size // ps):
+            page_toks = tokens[k * ps:(k + 1) * ps]
+            key = _page_key(key, page_toks)
+            e = self.prefix._chain.get(key)
+            if e is None or not np.array_equal(e.tokens, page_toks):
+                break
+            n += ps
+        return n
+
+    def stats(self) -> dict:
+        out = dict(self.pool.stats())
+        out.update(pages_shared=self.pages_shared_total,
+                   prefill_skipped_tokens=self.prefill_skipped_tokens,
+                   cow_forks=self.cow_forks)
+        if self.prefix is not None:
+            out.update(prefix_entries=len(self.prefix),
+                       prefix_hits=self.prefix.hits,
+                       prefix_misses=self.prefix.misses)
+        return out

@@ -69,6 +69,7 @@ CLASS_RANK = {k: i for i, k in enumerate(CLASSES)}
 REASON_CANCELLED = "cancelled"
 REASON_SHED = "shed"
 REASON_RETRIES = "retries_exhausted"
+REASON_POOL = "pool_exhausted"      # paged KV: request can never fit
 
 
 class QueueFull(RuntimeError):
@@ -232,7 +233,7 @@ class SlotScheduler:
 
     def __init__(self, n_slots: int, *, max_queue: int | None = None,
                  policy: str = "fifo", shed_watermark: int | None = None,
-                 aging_rounds: int = 8):
+                 aging_rounds: int = 8, prefix_score=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if policy not in ADMISSION_POLICIES:
@@ -250,6 +251,10 @@ class SlotScheduler:
         self.policy = policy
         self.shed_watermark = shed_watermark
         self.aging_rounds = aging_rounds
+        # paged-KV upgrade of "longest_prefix": a callable
+        # `prompt -> reusable prefix tokens` (PagedKV.match_len) turns the
+        # prompt-length heuristic into actual page-level reuse scoring
+        self.prefix_score = prefix_score
         self._queues: dict[str, deque[Request]] = {k: deque() for k in CLASSES}
         self._slots: list[Request | None] = [None] * n_slots
         self._quarantined: set[int] = set()
@@ -372,6 +377,17 @@ class SlotScheduler:
     def _admission_key(self, req: Request):
         rank = req.effective_rank(self.aging_rounds)
         if self.policy == "longest_prefix":
+            if self.prefix_score is not None:
+                # page-level reuse scoring: requests whose prompt prefix
+                # is already resident in the shared KV pool go first —
+                # they skip that much prefill, so admitting them early
+                # frees their slot (and pages) soonest. Uncovered prompt
+                # length breaks ties: the longest *remaining* prefill
+                # starts earliest, preserving the heuristic's overlap
+                # rationale for the part that still has to run.
+                reused = int(self.prefix_score(req.prompt))
+                return (rank, -reused, -(req.prompt.size - reused),
+                        req.rid)
             # longest prompt first within a rank: long prefills start
             # earliest so their extra slot-steps overlap short turnover
             return (rank, -req.prompt.size, req.rid)

@@ -52,8 +52,10 @@ from repro.runtime.engine import (DecodeEngine, StallClock, make_nan_scan,
                                   make_slot_corrupt, make_slot_restore,
                                   make_slot_snapshot)
 from repro.runtime.faults import FaultPlan, SessionWedged
-from repro.runtime.scheduler import (CLASSES, DONE, QUEUED, REASON_RETRIES,
-                                     RUNNING, RequestHandle, SlotScheduler)
+from repro.runtime.kvpool import PagedKV, PoolExhausted
+from repro.runtime.scheduler import (CLASSES, DONE, QUEUED, REASON_POOL,
+                                     REASON_RETRIES, RUNNING, RequestHandle,
+                                     SlotScheduler)
 
 
 class ServeLoop:
@@ -267,7 +269,14 @@ class ServeSession:
                  watchdog_s: float | None = None,
                  max_retries: int = 2, retry_backoff_s: float = 0.05,
                  nan_check: bool = False,
-                 faults: "FaultPlan | None" = None):
+                 faults: "FaultPlan | None" = None,
+                 kv: "PagedKV | None" = None,
+                 page_copy_fn: Callable | None = None,
+                 page_scrub_fn: Callable | None = None):
+        if kv is not None and preempt:
+            raise ValueError("paged KV serving does not support slot "
+                             "preemption (slot snapshots do not carry page "
+                             "tables); open the session with preempt=False")
         self._chunk_fn = chunk_fn
         self._refill_fn = refill_fn
         self.params = params
@@ -281,10 +290,20 @@ class ServeSession:
         self.watchdog_s = watchdog_s
         self.max_retries = max_retries
         self.retry_backoff_s = retry_backoff_s
+        # paged KV pool (runtime/kvpool.py): host-side page allocator +
+        # prefix cache; refill installs page tables instead of zeroing
+        # cache rows, and `longest_prefix` admission scores actual
+        # page-level reuse instead of raw prompt length
+        self.kv = kv
+        self._page_copy_fn = page_copy_fn
+        self._page_scrub_fn = page_scrub_fn
         self.scheduler = SlotScheduler(n_slots, max_queue=max_queue,
                                        policy=admission,
                                        shed_watermark=shed_watermark,
-                                       aging_rounds=aging_rounds)
+                                       aging_rounds=aging_rounds,
+                                       prefix_score=(kv.match_len
+                                                     if kv is not None
+                                                     else None))
         self.clock = StallClock()
         # checkpoint/restore + fault machinery; the engine defaults cover
         # flat (batch-axis-0) caches, model caches pass steps.py helpers
@@ -305,6 +324,10 @@ class ServeSession:
             maxlen=HISTORY)
         self.handles: dict[int, RequestHandle] = {}    # in-flight only
         self._pending_release: set[int] = set()
+        # slots whose request completed cleanly: their prompt pages seed
+        # the prefix cache before the pages are released (paged KV only)
+        self._pending_publish: set[int] = set()
+        self._n_pool_exhausted = 0
         # host table freed but device row still active (preempted / dead
         # slots): folded into the next refill's release mask
         self._pending_deactivate: set[int] = set()
@@ -439,6 +462,10 @@ class ServeSession:
         if req is not None:
             self.scheduler.release(slot)
         self._pending_deactivate.add(slot)
+        if self.kv is not None:
+            # the slot's rows may hold NaN: its freed pages are marked
+            # dirty and scrubbed on device before they can be reused
+            self.kv.release(slot, dirty=True)
         if quarantine:
             self.scheduler.quarantine(slot)
         if req is None:
@@ -477,6 +504,35 @@ class ServeSession:
             self._pending_deactivate.add(slot)
             self.scheduler.requeue(req, front=True)
 
+    def _alloc_pages(self, fresh: list, events: list) -> list:
+        """Paged KV admission: build each fresh slot's page table. A
+        request the pool cannot cover right now is un-admitted and
+        requeued at the front (its pages free as running slots retire);
+        when the whole pool is idle and empty and it *still* does not
+        fit, it fails terminally with the typed reason "pool_exhausted".
+        A scripted `page_alloc_fail` fault forces the exhausted path for
+        one boundary (always a requeue, never terminal)."""
+        forced = (self._faults is not None
+                  and self._faults.page_alloc_failed(self._chunk_index))
+        kept: list = []
+        for slot, req in fresh:
+            try:
+                if forced:
+                    raise PoolExhausted(0, self.kv.pool.free_pages)
+                alloc = self.kv.admit(slot, req.prompt, req.max_new)
+            except PoolExhausted:
+                self._n_pool_exhausted += 1
+                self.scheduler.release(slot)
+                if (not forced and not kept
+                        and self.scheduler.running == 0
+                        and self.kv.pool.used_pages == 0):
+                    self._fail_request(req, REASON_POOL, events)
+                else:
+                    self.scheduler.requeue(req, front=True)
+                continue
+            kept.append((slot, req, alloc))
+        return kept
+
     def _admit_and_refill(self, events: list) -> None:
         for slot, req in list(self.scheduler.running_requests()):
             if req.state != RUNNING:            # cancelled mid-flight
@@ -485,8 +541,20 @@ class ServeSession:
         for slot in self._pending_release:
             self.scheduler.release(slot)
             self._pending_deactivate.add(slot)
+            if self.kv is not None:
+                if slot in self._pending_publish:
+                    self.kv.publish(slot)       # seed the prefix cache
+                self.kv.release(slot)
         self._pending_release.clear()
+        self._pending_publish.clear()
         self._retire_shed(events)       # sheds triggered since last poll
+        if self.kv is not None:
+            # pages freed from a corrupted slot may hold NaN — the one
+            # thing masked attention cannot hide — scrub before reuse
+            dirty = self.kv.pool.take_dirty_free()
+            if dirty:
+                self.state = self._page_scrub_fn(
+                    self.state, np.asarray(dirty, np.int32))
         if self.preempt:
             self._preempt_for_latency()
         admits = self.scheduler.admit()
@@ -497,6 +565,11 @@ class ServeSession:
             release[sorted(self._pending_deactivate)] = True
         fresh = [(s, r) for s, r in admits if r.snapshot is None]
         resumed = [(s, r) for s, r in admits if r.snapshot is not None]
+        kv_fresh = []
+        if self.kv is not None and fresh:
+            kv_fresh = self._alloc_pages(fresh, events)
+            fresh = [(s, r) for s, r, _ in kv_fresh]
+        granted = fresh + resumed       # still slot-assigned after alloc
         try:
             if self._faults is not None:
                 self._faults.check_refill(self._chunk_index)
@@ -510,8 +583,28 @@ class ServeSession:
                     pbuf[slot, :req.prompt.size] = req.prompt
                     plen[slot] = req.prompt.size
                     budget[slot] = req.max_new
-                self.state = self._refill_fn(self.state, admit, release,
-                                             pbuf, plen, budget)
+                if self.kv is not None:
+                    pages = np.zeros((self.n_slots, self.kv.pages_per_slot),
+                                     np.int32)
+                    start = np.zeros(self.n_slots, np.int32)
+                    cow_src: list[int] = []
+                    cow_dst: list[int] = []
+                    for slot, req, alloc in kv_fresh:
+                        pages[slot] = alloc.table
+                        start[slot] = alloc.prefill_skip
+                        for s, d in alloc.cow_copies:
+                            cow_src.append(s)
+                            cow_dst.append(d)
+                    self.state = self._refill_fn(self.state, admit, release,
+                                                 pbuf, plen, budget,
+                                                 pages, start)
+                    if cow_src:     # COW fork: copy before the next chunk
+                        self.state = self._page_copy_fn(
+                            self.state, np.asarray(cow_src, np.int32),
+                            np.asarray(cow_dst, np.int32))
+                else:
+                    self.state = self._refill_fn(self.state, admit, release,
+                                                 pbuf, plen, budget)
             for slot, req in resumed:
                 self.state = self._get_restore_fn()(
                     self.state, np.int32(slot), req.snapshot)
@@ -522,7 +615,9 @@ class ServeSession:
             # un-admit the round (reverse order restores queue positions);
             # pending deactivations retry at the next boundary. Bounded:
             # persistent refill failure must surface, not spin forever.
-            for slot, req in reversed(admits):
+            for slot, req in reversed(granted):
+                if self.kv is not None:
+                    self.kv.release(slot)
                 self.scheduler.release(slot)
                 self.scheduler.requeue(req, front=True)
             self._refill_failures += 1
@@ -590,8 +685,11 @@ class ServeSession:
             else:
                 self.handles.pop(req.rid, None)
         self._pending_release.clear()
+        self._pending_publish.clear()
         self._pending_deactivate.clear()
         self.state = self._state_factory()
+        if self.kv is not None:
+            self.kv.reset()     # the rebuilt pool holds no pages/tables
         self._wedged = False
 
     def poll(self, timeout_s: float | None = None
@@ -676,7 +774,8 @@ class ServeSession:
                 req.state = DONE
                 req.finished_at = now
                 self._pending_release.add(slot)
-                self._n_done += 1
+                self._pending_publish.add(slot)     # clean completion:
+                self._n_done += 1                   # prompt pages reusable
                 lat = now - req.submitted_at
                 self._latencies.append(lat)
                 cs = self._class_stats[req.klass]
@@ -769,6 +868,9 @@ class ServeSession:
             "chunk": self.chunk,
             "stall": self.clock.report(),
         }
+        if self.kv is not None:
+            out["kv"] = dict(self.kv.stats(),
+                             pool_exhausted=self._n_pool_exhausted)
         if self._faults is not None:
             out["faults"] = self._faults.summary()
         return out

@@ -69,7 +69,12 @@ def test_scan_bytes_linear_not_quadratic():
         return ys
     r = hlo_cost.analyze(_text(f, X))
     slice_bytes = 128 * 128 * 4
-    assert r["bytes"] < 64 * slice_bytes * 8     # small constant per step
+    # the per-step constant depends on how many copies/fusions this XLA
+    # build emits around the DUS (observed 8.0-8.1x across versions); the
+    # claim under test is linearity, so cap at a loose 16x per step —
+    # quadratic stacking would be ~32x here (64 slices * avg half stack)
+    # and grows with length, a constant factor does not
+    assert r["bytes"] < 64 * slice_bytes * 16
     assert r["bytes"] >= 64 * slice_bytes        # at least writes the stack
 
 

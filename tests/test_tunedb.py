@@ -133,6 +133,90 @@ def test_timed_race_on_device_tuned_not_slower(monkeypatch):
 
 
 # ----------------------------------------------------------------------------
+# the composition lane: fused-vs-unfused routing
+# ----------------------------------------------------------------------------
+
+COMP_KEY = tuple(sorted(pp.COMPOSITION_LANE.items()))
+
+
+def test_composition_lane_wins_routes_unfused():
+    """When a fused kernel's unfused composition times fastest, the race
+    demotes the fusion: route flips to "unfused", measured_us is the
+    composition's time, and the best *kernel* blocking is still recorded."""
+    best = modeled_pick("rmsnorm_matmul")
+    script = {COMP_KEY: 0.1}
+    r = pp.autotune("rmsnorm_matmul", SHAPES, mode="timed",
+                    timer=scripted_timer(script, default=1.0))
+    assert r.source == "timed" and r.route == "unfused"
+    assert r.measured_us == pytest.approx(0.1e6)
+    assert r.blocks == best
+    rec = registry.get_kernel_tune("rmsnorm_matmul", pp.shape_key(SHAPES, 4))
+    assert rec.route == "unfused" and rec.timed
+
+
+def test_composition_lane_losing_keeps_fused_route():
+    best = modeled_pick("rmsnorm_matmul")
+    script = {COMP_KEY: 5.0, tuple(sorted(best.items())): 0.5}
+    r = pp.autotune("rmsnorm_matmul", SHAPES, mode="timed",
+                    timer=scripted_timer(script, default=1.0))
+    assert r.route == "fused"
+    assert r.blocks == best
+    assert r.measured_us == pytest.approx(0.5e6)
+    rec = registry.get_kernel_tune("rmsnorm_matmul", pp.shape_key(SHAPES, 4))
+    assert rec.route == "fused"
+
+
+def test_composition_lane_erroring_keeps_fused_route():
+    """A composition that won't run can't win — scored inf like any lane."""
+    def timer(fn, blocks):
+        if tuple(sorted(blocks.items())) == COMP_KEY:
+            raise RuntimeError("composition refused to compile")
+        return 1.0
+    r = pp.autotune("rmsnorm_matmul", SHAPES, mode="timed", timer=timer)
+    assert r.source == "timed" and r.route == "fused"
+
+
+def test_unfused_kernel_has_no_composition_lane():
+    """matmul carries no composition; the sentinel never reaches the timer."""
+    def timer(fn, blocks):
+        assert "route" not in blocks
+        return 1.0
+    r = pp.autotune("matmul", SHAPES, mode="timed", timer=timer)
+    assert r.source == "timed" and r.route == "fused"
+
+
+def test_route_survives_db_round_trip(tmp_path):
+    pp.autotune("rmsnorm_matmul", SHAPES, mode="timed",
+                timer=scripted_timer({COMP_KEY: 0.1}, default=1.0))
+    rec = registry.get_kernel_tune("rmsnorm_matmul", pp.shape_key(SHAPES, 4))
+    assert rec.route == "unfused"
+    path = tmp_path / "tunes.json"
+    tunedb.TuneDB(path).record(rec, backend=BACKEND, mode="tuned")
+    got = tunedb.TuneDB(path).get(BACKEND, "tuned", "rmsnorm_matmul",
+                                  pp.shape_key(SHAPES, 4))
+    assert got == rec and got.route == "unfused"
+
+
+def test_policy_dispatches_composition_on_unfused_route():
+    """tuned_call honors a demoted fusion: the unfused composition runs
+    (unfused_routes counter) and the numerics still match the reference."""
+    m = k = n = 256
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    scale = jnp.ones((k,), jnp.float32) * 0.1
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    shapes = ops.kernel_shapes("rmsnorm_matmul", x, scale, w)
+    pp.autotune("rmsnorm_matmul", shapes, mode="timed",
+                timer=scripted_timer({COMP_KEY: 0.1}, default=1.0))
+    pol = KernelPolicy(mode="tuned")
+    with use_policy(pol):
+        out = ops.tuned_call("rmsnorm_matmul", x, scale, w)
+    assert pol.stats.get("unfused_routes") == 1
+    assert pol.stats.get("tune_hits") == 1
+    ref = ops.OPS["rmsnorm_matmul"].reference(x, scale, w)
+    assert jnp.allclose(out, ref, atol=2e-2, rtol=2e-2)
+
+
+# ----------------------------------------------------------------------------
 # TuneDB persistence
 # ----------------------------------------------------------------------------
 
@@ -425,3 +509,30 @@ def test_gate_baseline_regressions(tmp_path):
     assert _run_gate(tmp_path, worse2, baseline=good) == 1
     # within tolerance passes
     assert _run_gate(tmp_path, good, baseline=good) == 0
+
+
+def test_gate_paged_requirement(tmp_path):
+    record = _gate_record(90.0, 100.0)
+    # rows absent -> fail
+    assert _run_gate(tmp_path, record, require="paged") == 1
+    record["serve_continuous"] += [
+        {"name": "serve/paged_kv", "us_per_call": 170.0,
+         "derived": "tokens_per_s=5900.0;private_tokens_per_s=4300.0;"
+                    "capacity_x=1.75;pages_shared=24;cow_forks=2;"
+                    "pool_exhausted=0"},
+        {"name": "serve/prefix_reuse", "us_per_call": 1400.0,
+         "derived": "cold_ttft_p50_ms=4.3;warm_ttft_p50_ms=1.4;"
+                    "ttft_speedup_x=3.1;prefill_skipped=96;prefix_hits=8"},
+    ]
+    assert _run_gate(tmp_path, record, require="paged") == 0
+    # prefix reuse never fired -> fail (no skip, no speedup)
+    bad = json.loads(json.dumps(record))
+    bad["serve_continuous"][-1]["derived"] = (
+        "cold_ttft_p50_ms=4.3;warm_ttft_p50_ms=4.2;ttft_speedup_x=1.0;"
+        "prefill_skipped=0;prefix_hits=0")
+    assert _run_gate(tmp_path, bad, require="paged") == 1
+    # no capacity win at equal memory -> fail
+    bad2 = json.loads(json.dumps(record))
+    bad2["serve_continuous"][-2]["derived"] = (
+        "tokens_per_s=5900.0;capacity_x=1.00")
+    assert _run_gate(tmp_path, bad2, require="paged") == 1
