@@ -31,11 +31,21 @@ concurrent requests the same pool memory holds relative to the private
 per-slot reservation (measured from actual page allocs, so prefix
 sharing counts).
 
+A fifth scenario prices the durability layer (runtime/journal.py +
+session snapshots + KV checksum scrub): the continuous workload runs
+with and without `durable_dir` to measure the fsync'd-journal overhead
+on fault-free tokens/s, a scripted crash + restore measures MTTR and
+asserts exactly-once bit-identical completion, and a bit-flip on a
+published prefix page must be detected and repaired before any request
+reuses it — the row `check_gate.py --require recovery` enforces.
+
 Row format: serve/{continuous|static},us_per_token,tokens_per_s=..;...
             serve/class_{latency|throughput|best_effort},p99_lat_us,...
             serve/slo,us_per_token,preemptions=..;retries=..;shed=..
             serve/paged_kv,us_per_token,tokens_per_s=..;capacity_x=..
             serve/prefix_reuse,warm_ttft_p50_us,ttft_speedup_x=..
+            serve/recovery,mttr_us,mttr_ms=..;overhead_pct=..;
+                bit_identical=1;exactly_once=1;violations=..;repairs=..
 """
 
 from __future__ import annotations
@@ -237,6 +247,149 @@ def run_paged(smoke: bool) -> list[str]:
     ]
 
 
+def run_recovery(smoke: bool) -> list[str]:
+    """The durability scenario: (a) journal + snapshot overhead on a
+    fault-free run vs the plain session (same workload, same cell);
+    (b) a scripted crash mid-decode followed by a measured restore
+    (journal replay + snapshot load = MTTR) that must finish the
+    workload exactly-once bit-identical; (c) a bit-flip on a shared
+    page, caught by the checksum verify and repaired by recompute."""
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.cluster import Cluster, ServeSessionProgram
+    from repro.runtime import FaultPlan
+    from repro.runtime.faults import SessionCrashed
+    from repro.runtime.journal import read_events, replay
+
+    cluster = Cluster(ARCH)
+    n_req = 128 if smoke else 192
+    prompts, outs = _workload(n_req, seed=3)
+    max_seq = MAX_PROMPT + max(OUT_LENS) + 1
+    # chunk=16: the durability tax is per poll (journal flush, group-
+    # commit fsync, amortized snapshot capture), so the overhead row is
+    # priced at the coarse host-sync cadence a throughput deployment
+    # runs — the same knob that amortizes host scheduling cost
+    program = cluster.compile(ServeSessionProgram(
+        slots=SLOTS, max_seq=max_seq, max_prompt=MAX_PROMPT, chunk=16,
+        snapshot_every=12))
+    params = program.init_params()
+
+    def timed(durable_dir=None, fsync=None):
+        sess = program.open(params=params, durable_dir=durable_dir,
+                            journal_fsync=fsync)
+        t0 = time.perf_counter()
+        handles = [sess.submit(p, int(n)) for p, n in zip(prompts, outs)]
+        sess.drain()
+        wall = time.perf_counter() - t0
+        st = sess.stats()
+        sess.close()
+        return st["emitted_total"] / wall, handles, st
+
+    dur_dir = tempfile.mkdtemp()
+    try:
+        # The arms differ by a few percent while the host drifts by
+        # about as much over a bench's lifetime, so neither best-of nor
+        # arm-at-a-time medians measure the tax: rotate the arm order
+        # each round (drift hits every arm equally) and compare per-arm
+        # medians. "durable" is the group-commit configuration (fsync
+        # every 12th poll, flush every poll: process-crash durable
+        # always, bounded power-loss window); "strict" fsyncs per poll.
+        timed()                                 # warm the compiled cell
+        arms = {"plain": lambda i: timed(),
+                "durable": lambda i: timed(f"{dur_dir}/nofault{i}", 12),
+                "strict": lambda i: timed(f"{dur_dir}/strict{i}", True)}
+        order = list(arms)
+        runs = {k: [] for k in arms}
+        rounds = 5 if smoke else 9
+        for i in range(rounds):
+            for k in order:
+                runs[k].append(arms[k](i))
+            order = order[1:] + order[:1]       # rotate: drift cancels
+
+        def med_overhead(arm):
+            # per-round pairwise ratio vs that round's plain run, median
+            # over rounds: slow drift cancels within a round, the rotated
+            # order cancels within-round position bias across rounds
+            ovs = sorted(100.0 * (1.0 - runs[arm][i][0] / runs["plain"][i][0])
+                         for i in range(rounds))
+            return ovs[rounds // 2]
+
+        tok_plain = sorted(r[0] for r in runs["plain"])[rounds // 2]
+        tok_durable, _, st_d = sorted(runs["durable"],
+                                      key=lambda r: r[0])[rounds // 2]
+        expected = {h.id: [int(t) for t in h.result()]
+                    for h in runs["plain"][0][1]}
+        overhead = med_overhead("durable")
+        strict_overhead = med_overhead("strict")
+
+        # crash mid-decode, restore, drain: exactly-once, bit-identical
+        crash_dir = dur_dir + "/crash"
+        sess = program.open(params=params, durable_dir=crash_dir,
+                            faults=FaultPlan().crash(at_chunk=18))
+        for p, n in zip(prompts, outs):
+            sess.submit(p, int(n))
+        try:
+            while sess.scheduler.busy or sess._pending_events:
+                sess.poll()
+            raise RuntimeError("crash fault never fired")
+        except SessionCrashed:
+            pass
+        committed = {rid: list(r.committed) for rid, r in
+                     replay(read_events(crash_dir + "/journal.jsonl"))
+                     .requests.items()}
+        sess2 = program.restore(crash_dir, params=params)
+        du = sess2.stats()["durability"]
+        final = {rid: list(t) for rid, t in committed.items()}
+        for h, toks, done in sess2.stream():
+            final.setdefault(h.id, []).extend(int(t) for t in toks)
+        bit_identical = int(final == expected)  # also proves exactly-once:
+        exactly_once = bit_identical            # a duplicate would lengthen
+        du_after = sess2.stats()["durability"]  # some stream
+    finally:
+        shutil.rmtree(dur_dir, ignore_errors=True)
+
+    # integrity: flip a published page between two prefix-sharing waves
+    pcluster = Cluster(PAGED_ARCH)
+    pprog = pcluster.compile(ServeSessionProgram(
+        slots=4, max_seq=25, max_prompt=16, chunk=CHUNK, paged=True,
+        page_size=PAGE_SIZE))
+    rng = np.random.default_rng(11)
+    pre = rng.integers(0, 256, size=12).astype(np.int32)
+    psess = pprog.open(params=pprog.init_params())
+
+    def pwave(tails):
+        hs = [psess.submit(np.concatenate(
+            [pre, np.asarray(t, np.int32)]), 8) for t in tails]
+        psess.drain()
+        return hs
+
+    pwave([[1], [2]])
+    psess.attach_faults(FaultPlan().bit_flip(at_chunk=psess._chunk_index))
+    flip_handles = pwave([[3], [4]])
+    pst = psess.stats()["durability"]
+    nan_escapes = sum(not h.ok for h in flip_handles)
+
+    mttr_ms = du["restore_s"] * 1e3
+    return [
+        f"serve/recovery,{mttr_ms * 1e3:.1f},"
+        f"mttr_ms={mttr_ms:.2f};overhead_pct={overhead:.2f};"
+        f"strict_overhead_pct={strict_overhead:.2f};"
+        f"tokens_per_s={tok_plain:.1f};"
+        f"durable_tokens_per_s={tok_durable:.1f};"
+        f"replayed={du['replayed_requests']};"
+        f"deduped={du_after['deduped_tokens']};"
+        f"snapshots={st_d['durability']['snapshots']};"
+        f"journal_bytes={st_d['durability']['journal_bytes']};"
+        f"bit_identical={bit_identical};exactly_once={exactly_once};"
+        f"violations={pst['integrity_violations']};"
+        f"repairs={pst['integrity_repairs']};"
+        f"nan_escapes={nan_escapes};requests={n_req}",
+    ]
+
+
 def main(smoke: bool = False) -> list[str]:
     import jax
 
@@ -304,6 +457,7 @@ def main(smoke: bool = False) -> list[str]:
         f"requests_done={slo['requests_done']};"
         f"occupancy_pct={slo['occupancy_pct']:.1f}")
     lines += run_paged(smoke)
+    lines += run_recovery(smoke)
     return lines
 
 

@@ -16,10 +16,24 @@ divergence — this is the CI chaos-smoke job's assertion.
 Prints a `# chaos:` summary line with fault/recovery counts.
 
     PYTHONPATH=src python examples/serve_chaos.py --requests 16
+
+`--crash` is the crash-restart drill: a child process serves the same
+workload with the durability layer on (journal + periodic snapshots)
+and SIGKILLs itself mid-decode; the parent verifies the kill, restores
+a session from the durable directory, drains it, and asserts that the
+union of journal-committed (pre-crash) and post-restore deliveries
+equals the fault-free reference exactly — every token once,
+bit-identical. Prints a `# chaos-crash:` line with the measured MTTR.
+
+    PYTHONPATH=src python examples/serve_chaos.py --crash
 """
 
 import argparse
+import os
+import signal
+import subprocess
 import sys
+import tempfile
 import time
 from pathlib import Path
 
@@ -63,6 +77,110 @@ def run_workload(program, params, prompts, out_lens, arrivals, plan=None):
     return handles, session.stats(), wedges
 
 
+def crash_setup(args):
+    """Deterministic program + workload shared by the crash-drill parent
+    and its SIGKILL'd child (both must submit the identical request
+    stream so journal rids line up)."""
+    cluster = Cluster(args.arch + "-smoke")
+    cfg = cluster.arch
+    program = cluster.compile(ServeSessionProgram(
+        slots=args.slots, max_seq=64, max_prompt=8, chunk=args.chunk,
+        snapshot_every=3))
+    params = program.init_params()
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab, size=rng.integers(1, 9))
+               .astype(np.int32) for _ in range(args.requests)]
+    out_lens = rng.choice([8, 12, 16, 24], size=args.requests)
+    return program, params, prompts, out_lens
+
+
+def run_crash_child(args):
+    """Serve with durability on and SIGKILL ourselves at the scripted
+    chunk — the unflushed tail dies with us; only fsync'd journal state
+    survives for the parent to recover."""
+    from repro.runtime.journal import Journal  # noqa: F401  (import check)
+
+    program, params, prompts, out_lens = crash_setup(args)
+    plan = FaultPlan().crash(at_chunk=args.crash_at)
+    sess = program.open(
+        params=params, durable_dir=args.dir, faults=plan,
+        crash_hook=lambda chunk: os.kill(os.getpid(), signal.SIGKILL))
+    for p, n in zip(prompts, out_lens):
+        sess.submit(p, int(n))
+    sess.drain()        # never completes: the crash hook kills -9 first
+    raise SystemExit("crash fault never fired — workload too short")
+
+
+def run_crash_drill(args):
+    """Parent side: fault-free reference, SIGKILL'd child, restore +
+    drain, exactly-once bit-identical verification."""
+    from repro.runtime.journal import read_events, replay
+
+    program, params, prompts, out_lens = crash_setup(args)
+    print("reference run (fault-free, in-process):")
+    ref = program.open(params=params)
+    ref_handles = [ref.submit(p, int(n))
+                   for p, n in zip(prompts, out_lens)]
+    ref.drain()
+    expected = {h.id: [int(t) for t in h.result()] for h in ref_handles}
+    print(f"  {len(expected)} done, "
+          f"{sum(len(t) for t in expected.values())} tokens")
+
+    with tempfile.TemporaryDirectory() as d:
+        child_args = [sys.executable, __file__, "--crash-child",
+                      "--dir", d, "--arch", args.arch,
+                      "--slots", str(args.slots),
+                      "--requests", str(args.requests),
+                      "--chunk", str(args.chunk),
+                      "--seed", str(args.seed),
+                      "--crash-at", str(args.crash_at)]
+        print(f"child run (SIGKILL at chunk {args.crash_at}):")
+        proc = subprocess.run(child_args, env=dict(
+            os.environ, PYTHONPATH=str(
+                Path(__file__).resolve().parents[1] / "src")))
+        if proc.returncode != -signal.SIGKILL:
+            print(f"  child exited {proc.returncode}, expected "
+                  f"{-signal.SIGKILL} (SIGKILL) — crash never fired")
+            raise SystemExit(1)
+        print(f"  child killed -9, journal + snapshots left in {d}")
+
+        committed = {rid: list(r.committed) for rid, r in
+                     replay(read_events(Path(d) / "journal.jsonl"))
+                     .requests.items()}
+        pre_crash = sum(len(t) for t in committed.values())
+        sess = program.restore(d, params=params)
+        du = sess.stats()["durability"]
+        final = {rid: list(toks) for rid, toks in committed.items()}
+        for h, toks, done in sess.stream():
+            final.setdefault(h.id, []).extend(int(t) for t in toks)
+
+        mismatches = dupes = 0
+        for rid, want in expected.items():
+            got = final.get(rid, [])
+            if got != want:
+                tag = ("over-delivered"
+                       if got[:len(want)] == want else "DIVERGED")
+                if tag == "over-delivered":
+                    dupes += 1
+                else:
+                    mismatches += 1
+                print(f"  req {rid}: {tag} "
+                      f"({len(got)} vs {len(want)} tokens)")
+        identical = "yes" if mismatches == 0 else "NO"
+        exactly_once = "yes" if dupes == 0 else "NO"
+        print(f"# chaos-crash: crash_at={args.crash_at} "
+              f"committed_pre_crash={pre_crash} "
+              f"replayed={du['replayed_requests']} "
+              f"resubmitted={du['resubmitted']} "
+              f"recovered_terminal={du['recovered_terminal']} "
+              f"deduped={sess.stats()['durability']['deduped_tokens']} "
+              f"snapshot_step={du['restored_step']} "
+              f"mttr_ms={du['restore_s'] * 1e3:.1f} "
+              f"bit_identical={identical} exactly_once={exactly_once}")
+        if mismatches or dupes:
+            raise SystemExit(1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-125m")
@@ -74,7 +192,23 @@ def main():
     ap.add_argument("--watchdog", type=float, default=0.5,
                     help="per-chunk device-wait bound (seconds)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--crash", action="store_true",
+                    help="crash-restart drill: SIGKILL'd child + "
+                         "journal/snapshot restore (see module docstring)")
+    ap.add_argument("--crash-at", type=int, default=6,
+                    help="chunk boundary the child crashes at")
+    ap.add_argument("--crash-child", action="store_true",
+                    help=argparse.SUPPRESS)       # internal: child mode
+    ap.add_argument("--dir", default=None,
+                    help=argparse.SUPPRESS)       # internal: durable dir
     args = ap.parse_args()
+
+    if args.crash_child:
+        run_crash_child(args)
+        return
+    if args.crash:
+        run_crash_drill(args)
+        return
 
     cluster = Cluster(args.arch + "-smoke")
     cfg = cluster.arch

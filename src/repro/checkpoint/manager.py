@@ -97,7 +97,8 @@ class CheckpointManager:
         else:
             _write()
 
-    def _write_step(self, step: int, snapshot: dict[str, np.ndarray]):
+    def _write_step(self, step: int, snapshot: dict[str, np.ndarray],
+                    extra: dict[str, str] | None = None):
         tmp = self.dir / f".tmp-{step}"
         final = self.dir / f"step-{step:09d}"
         if tmp.exists():
@@ -112,6 +113,8 @@ class CheckpointManager:
                        for k, (v, dt) in encoded.items()},
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        for name, payload in (extra or {}).items():
+            (tmp / name).write_text(payload)    # inside tmp: atomic too
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)                       # atomic publish
@@ -135,6 +138,68 @@ class CheckpointManager:
         if self._error is not None:
             err, self._error = self._error, None
             raise err
+
+    # --------------------------------------------------- serving session
+    def save_session(self, step: int, state, meta: dict):
+        """One bit-exact serving-session snapshot: the device state
+        pytree plus the host-side scheduler/pool bookkeeping
+        (`ServeSession` builds `meta`), as a *single* `.ckpt` file — a
+        json manifest line (meta + per-leaf key/dtype/shape, view-dtype
+        discipline as in `save`) followed by the raw leaf bytes in
+        manifest order. Not npz: the session state is small and the
+        write sits on the decode critical path, where `np.savez`'s
+        zipfile framing (per-member headers + CRC32) costs ~10x the
+        raw-bytes concat. Everything is staged in memory and hits the
+        filesystem as one write + one atomic rename (a crash mid-write
+        leaves the previous snapshot intact; the journal covers the
+        gap)."""
+        self.wait()
+        encoded = {k: _encode(np.ascontiguousarray(v))
+                   for k, v in _flatten(jax.device_get(state)).items()}
+        manifest = {"step": step, "meta": meta,
+                    "leaves": [{"key": k, "dtype": dt,
+                                "view": str(v.dtype),
+                                "shape": list(v.shape)}
+                               for k, (v, dt) in encoded.items()]}
+        blob = b"".join([json.dumps(manifest).encode(), b"\n",
+                         *(v.tobytes() for v, _ in encoded.values())])
+        tmp = self.dir / f".tmp-session-{step}.ckpt"
+        tmp.write_bytes(blob)
+        tmp.rename(self.dir / f"session-{step:09d}.ckpt")
+        for old in self.session_steps()[: -self.keep]:
+            (self.dir / f"session-{old:09d}.ckpt").unlink(missing_ok=True)
+
+    def session_steps(self) -> list[int]:
+        return sorted(int(p.stem.split("-")[1])
+                      for p in self.dir.glob("session-*.ckpt"))
+
+    def latest_session_step(self) -> int | None:
+        steps = self.session_steps()
+        return steps[-1] if steps else None
+
+    def restore_session(self, step: int, like) -> tuple[object, dict]:
+        """Inverse of `save_session`: (device-state pytree shaped like
+        `like`, the session meta dict)."""
+        raw = (self.dir / f"session-{step:09d}.ckpt").read_bytes()
+        nl = raw.index(b"\n")                   # manifest json has no \n
+        manifest = json.loads(raw[:nl])
+        leaves, off = {}, nl + 1
+        for spec in manifest["leaves"]:
+            arr = np.frombuffer(
+                raw, dtype=np.dtype(spec["view"]), offset=off,
+                count=int(np.prod(spec["shape"], dtype=np.int64)),
+            ).reshape(spec["shape"])
+            leaves[spec["key"]] = _decode(arr, spec["dtype"])
+            off += arr.nbytes
+        flat_like, _ = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for path, _leaf in flat_like:
+            key = _SEP.join(_key_str(k) for k in path)
+            if key not in leaves:
+                raise KeyError(f"session snapshot missing leaf {key}")
+            out.append(leaves[key])
+        state = jax.tree_util.tree_unflatten(jax.tree.structure(like), out)
+        return state, manifest["meta"]
 
     # ---------------------------------------------------------- restore
     def all_steps(self) -> list[int]:

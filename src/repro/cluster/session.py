@@ -138,6 +138,11 @@ class ServeSessionProgram:
     #   pages_per_slot + 1 (trash page), i.e. private-layout capacity
     prefix_cache: bool = True              # publish finished prompts for
     #   COW prefix reuse across requests
+    snapshot_every: int | None = None      # chunks between bit-exact
+    #   session snapshots (needs open(durable_dir=...)); None = journal-only
+    journal_fsync: bool | int = True       # True/False/every-K (see Journal)
+    scrub_pages: int = 2                   # stamped pages re-verified per
+    #   boundary by the background integrity scrub (paged; 0 disables)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -544,6 +549,11 @@ class CompiledServeSession(Program):
                 ops["corrupt_slots"])
             self._page_copy_fn = engine.make_page_copy(ops["copy_pages"])
             self._page_scrub_fn = engine.make_page_scrub(ops["zero_pages"])
+            # integrity programs: page readback feeds publish-time checksum
+            # stamps + the background scrub; page flip is the scripted
+            # silent-corruption fault (chaos only)
+            self._page_read_fn = engine.make_page_read(ops["read_pages"])
+            self._page_flip_fn = engine.make_page_flip(ops["flip_pages"])
         else:
             self._refill_fn = engine.make_session_refill(
                 cache_zero=steps.zero_cache_slots)
@@ -561,6 +571,8 @@ class CompiledServeSession(Program):
                 cache_fill=steps.fill_cache_slots)
             self._page_copy_fn = None
             self._page_scrub_fn = None
+            self._page_read_fn = None
+            self._page_flip_fn = None
         self._last_session = None
 
     def init_params(self, seed: int | None = None):
@@ -582,10 +594,20 @@ class CompiledServeSession(Program):
         cache = steps.init_cache(cfg, spec.slots, clen)
         return engine.init_session_state(cache, spec.slots, spec.max_prompt)
 
-    def open(self, params=None, faults=None):
+    def open(self, params=None, faults=None, durable_dir=None,
+             resume: bool = False, crash_hook=None,
+             snapshot_every=None, journal_fsync=None):
         """A fresh `ServeSession` over this compiled cell (own slot pool,
         queue, scheduler, and stall clock). `faults` arms a
-        `runtime.FaultPlan` against the session (chaos testing)."""
+        `runtime.FaultPlan` against the session (chaos testing).
+
+        `durable_dir` turns on the durability layer: a crash-consistent
+        request journal (fsync'd once per poll) plus, when the spec sets
+        ``snapshot_every``, periodic bit-exact session snapshots.
+        `resume=True` recovers from an existing `durable_dir` after a
+        crash (see `restore()`). `snapshot_every` / `journal_fsync`
+        override the spec's values per session — they are host-side
+        knobs, so no recompile (`None` keeps the spec's choice)."""
         from repro.runtime import ServeSession
 
         spec = self.spec
@@ -618,9 +640,31 @@ class CompiledServeSession(Program):
                             kv=kv,
                             page_copy_fn=self._page_copy_fn,
                             page_scrub_fn=self._page_scrub_fn,
-                            faults=faults)
+                            faults=faults,
+                            durable_dir=durable_dir,
+                            snapshot_every=(spec.snapshot_every
+                                            if snapshot_every is None
+                                            else snapshot_every),
+                            journal_fsync=(spec.journal_fsync
+                                           if journal_fsync is None
+                                           else journal_fsync),
+                            page_read_fn=self._page_read_fn,
+                            page_flip_fn=self._page_flip_fn,
+                            scrub_pages=spec.scrub_pages,
+                            crash_hook=crash_hook,
+                            resume=resume)
         self._last_session = sess
         return sess
+
+    def restore(self, durable_dir, params=None, faults=None):
+        """Resume a crashed session from its `durable_dir`: load the
+        latest snapshot (if any), replay the journal tail, and hand back
+        a live session. Requests that finished before the crash surface
+        on `sess.recovered`; in-flight requests resume (bit-identically
+        from the snapshot, or by re-prefill with the journal-committed
+        prefix suppressed) — delivery stays exactly-once."""
+        return self.open(params=params, faults=faults,
+                         durable_dir=durable_dir, resume=True)
 
     def run(self, params=None, prompt=None, max_new: int | None = None) -> dict:
         """One-shot: submit one batch (one request per slot), drain, return

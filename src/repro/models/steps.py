@@ -330,6 +330,13 @@ def make_paged_cache_ops(cfg, B: int, cache_len: int):
       masked slots' table entries.
     * ``copy_pages(cache, src, dst)`` — pool page copy (the COW fork).
     * ``zero_pages(cache, pages)`` — pool page scrub (NaN quarantine).
+    * ``read_pages(cache, pages)`` — gather the requested pool pages,
+      page axis moved to the front of every returned array, so the host
+      can checksum page content (integrity stamp/verify).
+    * ``flip_pages(cache, pages)`` — *silent* corruption for the
+      ``bit_flip`` fault: perturb the pages' float content by +1
+      (finite values — the NaN sentinel scan cannot see it by design;
+      only the content checksum catches it).
     """
     mask = paged_cache_mask(cfg, B, cache_len)
 
@@ -434,9 +441,43 @@ def make_paged_cache_ops(cfg, B: int, cache_len: int):
             return one
         return _map(cache, fn_for)
 
+    def read_pages(cache, pages):
+        idx = jnp.asarray(pages, jnp.int32)
+        out = []
+
+        def fn_for(axis, paged):
+            def one(c):
+                if not paged:
+                    return c
+                if axis == 1:
+                    # (layers, pages, ...) -> page-major (n, layers, ...)
+                    out.append(jnp.moveaxis(c[:, idx], 1, 0))
+                else:
+                    out.append(c[idx])
+                return c
+            return one
+
+        _map(cache, fn_for)
+        return tuple(out)
+
+    def flip_pages(cache, pages):
+        idx = jnp.asarray(pages, jnp.int32)
+
+        def fn_for(axis, paged):
+            def one(c):
+                if not paged or not jnp.issubdtype(c.dtype, jnp.inexact):
+                    return c
+                one_v = jnp.ones((), c.dtype)
+                if axis == 1:
+                    return c.at[:, idx].add(one_v)
+                return c.at[idx].add(one_v)
+            return one
+        return _map(cache, fn_for)
+
     return {"zero_slots": zero_slots, "nan_slots": nan_slots,
             "corrupt_slots": corrupt_slots, "copy_pages": copy_pages,
-            "zero_pages": zero_pages}
+            "zero_pages": zero_pages, "read_pages": read_pages,
+            "flip_pages": flip_pages}
 
 
 # ----------------------------------------------------------------------------

@@ -3,9 +3,13 @@ from .engine import (DecodeEngine, StallClock, init_session_state,  # noqa: F401
                      make_session_refill, make_slot_corrupt,
                      make_slot_restore, make_slot_snapshot, make_train_chunk)
 from .faults import (Fault, FaultPlan, InjectedFault,  # noqa: F401
-                     SessionWedged)
+                     SessionCrashed, SessionWedged)
+from .journal import (Journal, ReplayedRequest, ReplaySummary,  # noqa: F401
+                      read_events, replay)
+from .kvpool import PagedKV, PagePool, PrefixCache, page_digests  # noqa: F401
 from .scheduler import (QueueFull, Request, RequestFailed,  # noqa: F401
-                        RequestHandle, SlotScheduler)
+                        RequestHandle, SlotScheduler, deserialize_request,
+                        serialize_request)
 from .train_loop import TrainLoop, TrainLoopConfig  # noqa: F401
 from .serve_loop import ServeLoop, ServeSession  # noqa: F401
 from .compile_cache import CompileCache  # noqa: F401

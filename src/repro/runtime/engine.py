@@ -521,6 +521,31 @@ def make_page_scrub(cache_scrub: Callable, donate: bool = True) -> Callable:
     return jax.jit(page_scrub, donate_argnums=(0,) if donate else ())
 
 
+def make_page_read(cache_read: Callable) -> Callable:
+    """Pool page readback: `page_read(state, pages) -> tuple of arrays`,
+    one per pool leaf, page axis first — the host digests these for the
+    per-page integrity checksum. Read-only (never donated); retraces per
+    distinct page count, which stays small (publish batches and the
+    bounded scrub budget)."""
+
+    def page_read(state, pages):
+        return cache_read(state["cache"], pages)
+
+    return jax.jit(page_read)
+
+
+def make_page_flip(cache_flip: Callable, donate: bool = True) -> Callable:
+    """Silent page corruption for the `bit_flip` fault:
+    `page_flip(state, pages) -> state` perturbs the pages' float content
+    by +1 — finite values the NaN sentinel scan cannot see, so only the
+    content checksum catches it."""
+
+    def page_flip(state, pages):
+        return dict(state, cache=cache_flip(state["cache"], pages))
+
+    return jax.jit(page_flip, donate_argnums=(0,) if donate else ())
+
+
 # ----------------------------------------------------------------------------
 # Slot-granular checkpoint/resume + fault detection — the elastic layer
 # ----------------------------------------------------------------------------

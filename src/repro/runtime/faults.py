@@ -32,18 +32,34 @@ Fault kinds (all fire exactly once, at their scripted chunk):
   shed/requeue path: the affected admissions are un-admitted and requeued
   at the front of their class — no crash, no token loss — and the
   session's `stats()["kv"]["pool_exhausted"]` counter records the event.
+* ``bit_flip``   — a published KV page's device content is silently
+  perturbed (finite values, not NaN) before chunk N dispatches. The NaN
+  sentinel scan cannot see it by design; detection is the per-page
+  content checksum (stamped at `PagedKV.publish`), verified before the
+  page is shared via the PrefixCache and by the background scrub.
+  Recovery quarantines the page, drops the poisoned prefix chain, and
+  repairs by recompute (the next requester re-prefills).
+* ``crash``      — the process dies at the END of chunk N's poll, after
+  the journal commit (`crash_hook`; the default raises `SessionCrashed`,
+  the chaos harness SIGKILLs itself for a true ``kill -9``). Recovery is
+  out-of-process: restart + `restore()` replays the journal/snapshot.
 
 The plan is injected per-session (``program.open(faults=plan)`` or the
 ``faults=`` constructor argument) and threaded through the driver as
 query hooks — the session stays fault-free code when no plan is attached.
+
+Thread safety: the serve loop and the watchdog thread both consult the
+plan (e.g. `pending_wedge` mid-wait while `poll` consumes faults), so
+all mutation of `_consumed`/`fired` happens under one internal lock.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 KINDS = ("kill_slot", "corrupt_nan", "wedge", "refill_error",
-         "page_alloc_fail")
+         "page_alloc_fail", "bit_flip", "crash")
 
 
 class InjectedFault(RuntimeError):
@@ -70,14 +86,27 @@ class SessionWedged(RuntimeError):
         self.stall = stall
 
 
+class SessionCrashed(RuntimeError):
+    """The scripted ``crash`` fault fired: the process is declared dead
+    at the end of this chunk's poll (after the journal commit). In-
+    process harnesses catch this and re-open the session with
+    ``resume=True``; the chaos subprocess harness SIGKILLs itself
+    instead so the restart is a true ``kill -9`` recovery."""
+
+    def __init__(self, chunk: int):
+        super().__init__(f"injected process crash at end of chunk {chunk}")
+        self.chunk = chunk
+
+
 @dataclasses.dataclass(frozen=True)
 class Fault:
     """One scripted failure: `kind` at chunk `at_chunk` (slot-targeted
-    kinds carry `slot`)."""
+    kinds carry `slot`; ``bit_flip`` may carry a target `page`)."""
 
     kind: str
     at_chunk: int
     slot: int | None = None
+    page: int | None = None
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -90,6 +119,8 @@ class Fault:
             raise ValueError(f"{self.kind} needs a target slot")
         if not needs_slot and self.slot is not None:
             raise ValueError(f"{self.kind} does not take a slot")
+        if self.page is not None and self.kind != "bit_flip":
+            raise ValueError(f"{self.kind} does not take a page")
 
 
 class FaultPlan:
@@ -112,10 +143,14 @@ class FaultPlan:
         self.faults: list[Fault] = list(faults or [])
         self.fired: list[tuple[str, int, int | None]] = []
         self._consumed: set[int] = set()
+        # the serve loop and the watchdog thread both consume/inspect
+        # the plan concurrently
+        self._lock = threading.Lock()
 
     # -- builders --------------------------------------------------------
-    def add(self, kind: str, at_chunk: int, slot: int | None = None):
-        self.faults.append(Fault(kind, at_chunk, slot))
+    def add(self, kind: str, at_chunk: int, slot: int | None = None,
+            page: int | None = None):
+        self.faults.append(Fault(kind, at_chunk, slot, page))
         return self
 
     def kill_slot(self, at_chunk: int, slot: int) -> "FaultPlan":
@@ -133,15 +168,27 @@ class FaultPlan:
     def page_alloc_fail(self, at_chunk: int) -> "FaultPlan":
         return self.add("page_alloc_fail", at_chunk)
 
+    def bit_flip(self, at_chunk: int, page: int | None = None) -> "FaultPlan":
+        """Silently perturb a published KV page's content before this
+        chunk (page=None targets the first stamped page at fire time)."""
+        return self.add("bit_flip", at_chunk, page=page)
+
+    def crash(self, at_chunk: int) -> "FaultPlan":
+        """Kill the process at the end of this chunk's poll, after the
+        journal commit."""
+        return self.add("crash", at_chunk)
+
     # -- driver queries (each consumes the fault it matches) -------------
     def _take(self, kind: str, chunk: int) -> list[Fault]:
         out = []
-        for i, f in enumerate(self.faults):
-            if i in self._consumed or f.kind != kind or f.at_chunk != chunk:
-                continue
-            self._consumed.add(i)
-            self.fired.append((f.kind, chunk, f.slot))
-            out.append(f)
+        with self._lock:
+            for i, f in enumerate(self.faults):
+                if (i in self._consumed or f.kind != kind
+                        or f.at_chunk != chunk):
+                    continue
+                self._consumed.add(i)
+                self.fired.append((f.kind, chunk, f.slot))
+                out.append(f)
         return out
 
     def kills(self, chunk: int) -> list[int]:
@@ -168,6 +215,16 @@ class FaultPlan:
             raise InjectedFault(f"injected refill failure at chunk "
                                 f"boundary {boundary}")
 
+    def bit_flips(self, chunk: int) -> "list[int | None]":
+        """Target pages to silently corrupt before this chunk dispatches
+        (None = let the session pick the first stamped page)."""
+        return [f.page for f in self._take("bit_flip", chunk)]
+
+    def crashed(self, chunk: int) -> bool:
+        """True when the process is scripted to die at the end of this
+        chunk's poll."""
+        return bool(self._take("crash", chunk))
+
     # -- introspection ---------------------------------------------------
     @property
     def has_wedge(self) -> bool:
@@ -178,8 +235,9 @@ class FaultPlan:
         """A wedge is scripted and has not fired yet (the session checks
         this before dispatching: a wedge with no watchdog would block the
         driver forever, which is a harness misconfiguration)."""
-        return any(f.kind == "wedge" and i not in self._consumed
-                   for i, f in enumerate(self.faults))
+        with self._lock:
+            return any(f.kind == "wedge" and i not in self._consumed
+                       for i, f in enumerate(self.faults))
 
     @property
     def has_corruption(self) -> bool:
@@ -187,14 +245,17 @@ class FaultPlan:
 
     @property
     def exhausted(self) -> bool:
-        return len(self._consumed) == len(self.faults)
+        with self._lock:
+            return len(self._consumed) == len(self.faults)
 
     def summary(self) -> dict:
         """{kind: fired count} plus planned totals, for the chaos line."""
         fired: dict[str, int] = {k: 0 for k in KINDS}
-        for kind, _, _ in self.fired:
-            fired[kind] += 1
-        return {"planned": len(self.faults), "fired": len(self.fired),
+        with self._lock:
+            n_fired = len(self.fired)
+            for kind, _, _ in self.fired:
+                fired[kind] += 1
+        return {"planned": len(self.faults), "fired": n_fired,
                 "by_kind": fired}
 
     def __repr__(self) -> str:

@@ -92,6 +92,10 @@ class PagePool:
         # pages that may hold NaN (freed from a corrupted slot); the
         # session scrubs these on device before they are handed out again
         self.dirty: set[int] = set()
+        # pages whose content failed an integrity check: permanently out
+        # of circulation (they count as used capacity, never re-enter the
+        # free list — the bank is fenced off, the cluster keeps serving)
+        self.quarantined: set[int] = set()
         self.allocs = 0
         self.alloc_failures = 0
 
@@ -136,9 +140,22 @@ class PagePool:
             assert self.refcount[p] > 0, f"release of free page {p}"
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
+                if p in self.quarantined:
+                    continue               # fenced off: never reallocated
                 self._free.append(p)
                 freed.append(p)
         return freed
+
+    def quarantine(self, page: int) -> None:
+        """Fence a page off permanently: it never re-enters the free list
+        (current holders drop their references normally; the page just
+        stays dead afterwards)."""
+        page = int(page)
+        if page == TRASH_PAGE:
+            return
+        self.quarantined.add(page)
+        if self.refcount[page] == 0 and page in self._free:
+            self._free.remove(page)
 
     def mark_dirty(self, pages) -> None:
         self.dirty.update(int(p) for p in pages if p != TRASH_PAGE)
@@ -157,7 +174,8 @@ class PagePool:
                 "occupancy_pct": 100.0 * self.used_pages /
                 max(self.n_pages - 1, 1),
                 "allocs": self.allocs,
-                "alloc_failures": self.alloc_failures}
+                "alloc_failures": self.alloc_failures,
+                "quarantined_pages": len(self.quarantined)}
 
 
 def _page_key(prev_key: bytes, tokens: np.ndarray) -> bytes:
@@ -167,10 +185,28 @@ def _page_key(prev_key: bytes, tokens: np.ndarray) -> bytes:
     return h.digest()
 
 
+def page_digests(arrays, n: int) -> list[bytes]:
+    """Content checksum per page from a page-major device readback.
+
+    `arrays` is what the session's `page_read_fn` returns: one array per
+    pageable cache leaf, each with the page axis first (shape (n, ...)).
+    The digest of page j folds page j of every leaf, so any single leaf's
+    corruption changes it."""
+    host = [np.asarray(a) for a in arrays]
+    out = []
+    for j in range(n):
+        h = hashlib.blake2b(digest_size=16)
+        for a in host:
+            h.update(np.ascontiguousarray(a[j]).tobytes())
+        out.append(h.digest())
+    return out
+
+
 @dataclasses.dataclass
 class _PrefixEntry:
     page: int
     tokens: np.ndarray     # the page's token content (page_size,)
+    parent: bytes = b"root"    # chain key of the previous page's entry
     hits: int = 0
 
 
@@ -204,14 +240,14 @@ class PrefixCache:
         published = 0
         for k in range(n_full):
             page_toks = tokens[k * ps:(k + 1) * ps]
-            key = _page_key(key, page_toks)
+            parent, key = key, _page_key(key, page_toks)
             if key in self._chain:
                 continue                        # prefix already published
             page = int(pages[k])
-            if page == TRASH_PAGE:
+            if page == TRASH_PAGE or page in self.pool.quarantined:
                 break
             self.pool.ref([page])
-            self._chain[key] = _PrefixEntry(page, page_toks.copy())
+            self._chain[key] = _PrefixEntry(page, page_toks.copy(), parent)
             self._order.append(key)
             published += 1
         return published
@@ -245,6 +281,27 @@ class PrefixCache:
         while self._order and len(freed) < n_pages:
             key = self._order.pop(0)
             e = self._chain.pop(key)
+            freed += self.pool.release([e.page])
+        return freed
+
+    def drop_page(self, page: int) -> list[int]:
+        """Remove every chain entry routed through `page` — and, because
+        a chain suffix is meaningless without its prefix, every entry
+        downstream of one (transitively via `parent` links). Releases the
+        dropped entries' cache references; returns the pages that became
+        free."""
+        doomed = {k for k, e in self._chain.items() if e.page == page}
+        changed = bool(doomed)
+        while changed:
+            changed = False
+            for k, e in self._chain.items():
+                if k not in doomed and e.parent in doomed:
+                    doomed.add(k)
+                    changed = True
+        freed: list[int] = []
+        for k in doomed:
+            e = self._chain.pop(k)
+            self._order.remove(k)
             freed += self.pool.release([e.page])
         return freed
 
@@ -289,15 +346,28 @@ class PagedKV:
         self.pages_shared_total = 0
         self.prefill_skipped_tokens = 0
         self.cow_forks = 0
+        # per-page content checksums, stamped at publish (integrity)
+        self.checksums: dict[int, bytes] = {}
+        self.integrity_checks = 0
+        self.integrity_violations = 0
+        self.integrity_repairs = 0
+        self._scrub_cursor = 0
 
     # -- admission -----------------------------------------------------------
-    def admit(self, slot: int, prompt: np.ndarray,
-              max_new: int) -> SlotAlloc:
+    def admit(self, slot: int, prompt: np.ndarray, max_new: int,
+              *, verify=None) -> SlotAlloc:
         """Build slot's page table for `prompt` + up to `max_new` output
         tokens. Shared prefix pages are mapped read-only; the remainder
         is freshly allocated. Raises `PoolExhausted` (allocating nothing)
         when the pool cannot cover the fresh pages even after evicting
-        prefix-cache entries."""
+        prefix-cache entries.
+
+        `verify(pages) -> bad_pages` is the integrity hook: when set,
+        prefix-matched pages are content-checked against their publish
+        checksums *before* they are shared. Corrupt pages are
+        quarantined (chain dropped), the match is retried — it now stops
+        at the clean prefix — and the request proceeds with fresh pages
+        instead: repair by recompute, never a crash."""
         assert not self._slot_owned[slot], f"slot {slot} already mapped"
         ps = self.pool.page_size
         prompt = np.asarray(prompt, np.int32)
@@ -310,6 +380,15 @@ class PagedKV:
                 f"max_new {max_new}, page_size {ps})")
 
         shared = self.prefix.match(prompt) if self.prefix else []
+        if shared and verify is not None:
+            bad = list(verify(shared))
+            if bad:
+                for p in bad:
+                    self.quarantine_page(p)
+                # the poisoned chain is gone; only the clean prefix (if
+                # any) can match now — the rest re-prefills from tokens
+                shared = self.prefix.match(prompt) if self.prefix else []
+                self.integrity_repairs += 1
         # the final prompt token must be re-fed (its forward pass emits
         # the first sampled token), so never skip the whole prompt; an
         # exact full-coverage hit COW-forks the page the re-fed token
@@ -325,7 +404,8 @@ class PagedKV:
             fresh = self.pool.alloc(n_fresh)
         except PoolExhausted:
             if self.prefix is not None:
-                self.prefix.evict(n_fresh - self.pool.free_pages)
+                evicted = self.prefix.evict(n_fresh - self.pool.free_pages)
+                self._purge_checksums(evicted)
             try:
                 fresh = self.pool.alloc(n_fresh)
             except PoolExhausted:
@@ -351,13 +431,34 @@ class PagedKV:
                          shared_pages=len(shared), cow_copies=cow)
 
     # -- retirement ----------------------------------------------------------
-    def publish(self, slot: int) -> int:
+    def publishable_pages(self, slot: int) -> list[int]:
+        """The slot's fully written prompt pages — the set `publish` would
+        seed the prefix cache with (and the set whose content the session
+        digests for the integrity stamp)."""
+        if self.prefix is None or self._slot_prompt[slot] is None:
+            return []
+        ps = self.pool.page_size
+        prompt = self._slot_prompt[slot]
+        n_full = min(prompt.size // ps, len(self._slot_table[slot]))
+        return [p for p in self._slot_table[slot][:n_full]
+                if p != TRASH_PAGE]
+
+    def publish(self, slot: int, *, digests: "dict[int, bytes] | None"
+                = None) -> int:
         """Seed the prefix cache with the slot's fully written prompt
-        pages (call on clean request completion, before `release`)."""
+        pages (call on clean request completion, before `release`).
+        `digests` stamps each page's content checksum; a page that
+        already carries a stamp keeps it (re-stamping a shared page from
+        possibly-corrupted current content would mask the corruption)."""
         if self.prefix is None or self._slot_prompt[slot] is None:
             return 0
-        return self.prefix.insert(self._slot_prompt[slot],
-                                  self._slot_table[slot])
+        published = self.prefix.insert(self._slot_prompt[slot],
+                                       self._slot_table[slot])
+        for page, digest in (digests or {}).items():
+            if int(page) in self.pool.quarantined:
+                continue
+            self.checksums.setdefault(int(page), digest)
+        return published
 
     def release(self, slot: int, *, dirty: bool = False) -> list[int]:
         """Return the slot's pages to the pool (shared pages survive as
@@ -369,9 +470,61 @@ class PagedKV:
         self._slot_table[slot] = []
         self._slot_prompt[slot] = None
         freed = self.pool.release(owned)
+        self._purge_checksums(freed)
         if dirty:
             self.pool.mark_dirty(freed)
         return freed
+
+    # -- integrity -----------------------------------------------------------
+    def _purge_checksums(self, pages) -> None:
+        """Stamps die with the content: a freed page's next occupant has
+        different bytes, and a stale stamp would read as corruption."""
+        for p in pages:
+            self.checksums.pop(int(p), None)
+
+    def verify(self, pages, digests) -> list[int]:
+        """Compare current content digests against the publish stamps.
+        Returns the pages whose content changed (unstamped pages are
+        skipped — nothing to compare against)."""
+        bad = []
+        for p, d in zip(pages, digests):
+            want = self.checksums.get(int(p))
+            if want is None:
+                continue
+            self.integrity_checks += 1
+            if d != want:
+                bad.append(int(p))
+        return bad
+
+    def quarantine_page(self, page: int) -> list[int]:
+        """Detected corruption on `page`: fence it off in the pool, drop
+        every prefix chain routed through it (transitively — a suffix
+        without its prefix is meaningless), and purge dead stamps. Slots
+        currently mapping the page keep running (attention through a
+        perturbed-but-finite page is the *old* failure mode; new sharers
+        are what this protects). Returns pages freed by the chain drop."""
+        page = int(page)
+        self.integrity_violations += 1
+        self.pool.quarantine(page)        # before drop: release() routes
+        freed = []                        # around the free list
+        if self.prefix is not None:
+            freed = self.prefix.drop_page(page)
+        self._purge_checksums(freed)
+        self.checksums.pop(page, None)
+        return freed
+
+    def scrub_candidates(self, limit: int) -> list[int]:
+        """Round-robin slice of the stamped pages for the background
+        integrity scrub (a few per chunk boundary keeps the cost bounded
+        while every published page is eventually re-checked)."""
+        pages = sorted(self.checksums)
+        if not pages or limit <= 0:
+            return []
+        n = min(int(limit), len(pages))
+        out = [pages[(self._scrub_cursor + i) % len(pages)]
+               for i in range(n)]
+        self._scrub_cursor = (self._scrub_cursor + n) % len(pages)
+        return out
 
     def reset(self) -> None:
         """Forget everything (wedge recovery: the device pool was rebuilt
@@ -383,6 +536,8 @@ class PagedKV:
         self.pool = PagePool(self.pool.n_pages, self.pool.page_size)
         if self.prefix is not None:
             self.prefix = PrefixCache(self.pool)
+        self.checksums = {}
+        self._scrub_cursor = 0
 
     def slot_pages(self, slot: int) -> list[int]:
         """The page ids the slot's device table addresses (table order)."""
@@ -405,11 +560,89 @@ class PagedKV:
             n += ps
         return n
 
+    def match_pages(self, prompt) -> int:
+        """Measured full-page prefix overlap — `match_len` in pages."""
+        return self.match_len(prompt) // self.pool.page_size
+
+    # -- durability ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """JSON-able image of every host-side structure: pool refcounts /
+        free list / dirty + quarantine sets, slot tables + prompts, the
+        prefix chain (keys, parents, token content), checksums, counters.
+        Bit-exact round-trip with `load_snapshot`."""
+        return {
+            "refcount": self.pool.refcount.tolist(),
+            "free": list(self.pool._free),
+            "dirty": sorted(self.pool.dirty),
+            "quarantined": sorted(self.pool.quarantined),
+            "allocs": self.pool.allocs,
+            "alloc_failures": self.pool.alloc_failures,
+            "slot_owned": [list(o) for o in self._slot_owned],
+            "slot_table": [list(t) for t in self._slot_table],
+            "slot_prompt": [None if p is None else p.tolist()
+                            for p in self._slot_prompt],
+            "chain": None if self.prefix is None else [
+                {"key": k.hex(), "parent": e.parent.hex(),
+                 "page": e.page, "tokens": e.tokens.tolist(),
+                 "hits": e.hits}
+                for k in self.prefix._order
+                for e in (self.prefix._chain[k],)],
+            "prefix_hits": 0 if self.prefix is None else self.prefix.hits,
+            "prefix_misses": (0 if self.prefix is None
+                              else self.prefix.misses),
+            "checksums": {str(p): d.hex()
+                          for p, d in sorted(self.checksums.items())},
+            "pages_shared_total": self.pages_shared_total,
+            "prefill_skipped_tokens": self.prefill_skipped_tokens,
+            "cow_forks": self.cow_forks,
+            "integrity_checks": self.integrity_checks,
+            "integrity_violations": self.integrity_violations,
+            "integrity_repairs": self.integrity_repairs,
+            "scrub_cursor": self._scrub_cursor,
+        }
+
+    def load_snapshot(self, d: dict) -> None:
+        """Rebuild the pool/cache/tables in place from `snapshot()`."""
+        self.pool.refcount = np.asarray(d["refcount"], np.int32)
+        self.pool._free = [int(p) for p in d["free"]]
+        self.pool.dirty = {int(p) for p in d["dirty"]}
+        self.pool.quarantined = {int(p) for p in d.get("quarantined", [])}
+        self.pool.allocs = int(d["allocs"])
+        self.pool.alloc_failures = int(d["alloc_failures"])
+        self._slot_owned = [[int(p) for p in o] for o in d["slot_owned"]]
+        self._slot_table = [[int(p) for p in t] for t in d["slot_table"]]
+        self._slot_prompt = [None if p is None else np.asarray(p, np.int32)
+                             for p in d["slot_prompt"]]
+        if self.prefix is not None:
+            self.prefix._chain = {}
+            self.prefix._order = []
+            for rec in (d["chain"] or []):
+                key = bytes.fromhex(rec["key"])
+                self.prefix._chain[key] = _PrefixEntry(
+                    int(rec["page"]),
+                    np.asarray(rec["tokens"], np.int32),
+                    bytes.fromhex(rec["parent"]), int(rec["hits"]))
+                self.prefix._order.append(key)
+            self.prefix.hits = int(d.get("prefix_hits", 0))
+            self.prefix.misses = int(d.get("prefix_misses", 0))
+        self.checksums = {int(p): bytes.fromhex(h)
+                          for p, h in d.get("checksums", {}).items()}
+        self.pages_shared_total = int(d["pages_shared_total"])
+        self.prefill_skipped_tokens = int(d["prefill_skipped_tokens"])
+        self.cow_forks = int(d["cow_forks"])
+        self.integrity_checks = int(d.get("integrity_checks", 0))
+        self.integrity_violations = int(d.get("integrity_violations", 0))
+        self.integrity_repairs = int(d.get("integrity_repairs", 0))
+        self._scrub_cursor = int(d.get("scrub_cursor", 0))
+
     def stats(self) -> dict:
         out = dict(self.pool.stats())
         out.update(pages_shared=self.pages_shared_total,
                    prefill_skipped_tokens=self.prefill_skipped_tokens,
-                   cow_forks=self.cow_forks)
+                   cow_forks=self.cow_forks,
+                   integrity_checks=self.integrity_checks,
+                   integrity_violations=self.integrity_violations,
+                   integrity_repairs=self.integrity_repairs)
         if self.prefix is not None:
             out.update(prefix_entries=len(self.prefix),
                        prefix_hits=self.prefix.hits,

@@ -113,6 +113,11 @@ class Request:
     preemptions: int = 0                    # times checkpointed + requeued
     not_before: float = 0.0                 # retry backoff gate (perf_counter)
     snapshot: Any = None                    # preempted slot state (resume)
+    prefix_pages_expected: int = 0          # measured page overlap at admit
+    suppress_until: int = 0                 # exactly-once: tokens already
+    #                                         journal-committed before a
+    #                                         crash are regenerated but not
+    #                                         re-delivered
 
     @property
     def emitted(self) -> int:
@@ -233,7 +238,8 @@ class SlotScheduler:
 
     def __init__(self, n_slots: int, *, max_queue: int | None = None,
                  policy: str = "fifo", shed_watermark: int | None = None,
-                 aging_rounds: int = 8, prefix_score=None):
+                 aging_rounds: int = 8, prefix_score=None,
+                 page_size: int | None = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if policy not in ADMISSION_POLICIES:
@@ -253,8 +259,11 @@ class SlotScheduler:
         self.aging_rounds = aging_rounds
         # paged-KV upgrade of "longest_prefix": a callable
         # `prompt -> reusable prefix tokens` (PagedKV.match_len) turns the
-        # prompt-length heuristic into actual page-level reuse scoring
+        # prompt-length heuristic into actual page-level reuse scoring;
+        # `page_size` converts the score to pages for the admit decision's
+        # `prefix_pages_expected` (correlated with kv prefix hits in stats)
         self.prefix_score = prefix_score
+        self.page_size = page_size
         self._queues: dict[str, deque[Request]] = {k: deque() for k in CLASSES}
         self._slots: list[Request | None] = [None] * n_slots
         self._quarantined: set[int] = set()
@@ -386,6 +395,10 @@ class SlotScheduler:
                 # starts earliest, preserving the heuristic's overlap
                 # rationale for the part that still has to run.
                 reused = int(self.prefix_score(req.prompt))
+                if self.page_size:
+                    # surfaced on the admit decision: the measured full-
+                    # page overlap this request is expected to map
+                    req.prefix_pages_expected = reused // self.page_size
                 return (rank, -reused, -(req.prompt.size - reused),
                         req.rid)
             # longest prompt first within a rank: long prefills start
@@ -468,3 +481,45 @@ class SlotScheduler:
     @property
     def busy(self) -> bool:
         return self.queued > 0 or self.running > 0
+
+
+# ----------------------------------------------------------------------------
+# Durability: Request <-> JSON (session snapshots)
+# ----------------------------------------------------------------------------
+
+def serialize_request(req: Request) -> dict:
+    """JSON-able image of a request for the session snapshot. Wall-clock
+    timestamps and preemption device snapshots are deliberately dropped:
+    times from a dead process are meaningless, and a preempted request
+    re-prefills on restore (journal-committed tokens are suppressed, so
+    delivery stays exactly-once and bit-identical either way)."""
+    return {"rid": req.rid, "prompt": req.prompt.tolist(),
+            "max_new": req.max_new, "klass": req.klass,
+            "deadline_s": req.deadline_s, "state": req.state,
+            "slot": req.slot, "tokens": list(req.tokens),
+            "hit_eos": req.hit_eos, "fail_reason": req.fail_reason,
+            "wait_rounds": req.wait_rounds, "retries": req.retries,
+            "preemptions": req.preemptions,
+            "prefix_pages_expected": req.prefix_pages_expected,
+            "suppress_until": req.suppress_until,
+            "had_snapshot": req.snapshot is not None}
+
+
+def deserialize_request(d: dict) -> Request:
+    """Inverse of `serialize_request` (fresh timestamps, no device
+    snapshot — see there)."""
+    req = Request(rid=int(d["rid"]),
+                  prompt=np.asarray(d["prompt"], np.int32),
+                  max_new=int(d["max_new"]), klass=str(d["klass"]),
+                  deadline_s=d.get("deadline_s"))
+    req.state = str(d["state"])
+    req.slot = d.get("slot")
+    req.tokens = [int(t) for t in d.get("tokens", [])]
+    req.hit_eos = bool(d.get("hit_eos", False))
+    req.fail_reason = d.get("fail_reason")
+    req.wait_rounds = int(d.get("wait_rounds", 0))
+    req.retries = int(d.get("retries", 0))
+    req.preemptions = int(d.get("preemptions", 0))
+    req.prefix_pages_expected = int(d.get("prefix_pages_expected", 0))
+    req.suppress_until = int(d.get("suppress_until", 0))
+    return req

@@ -18,6 +18,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
+from pathlib import Path
 from typing import Callable, Iterator
 
 import jax
@@ -51,11 +52,14 @@ def chunked_latency_stats(samples) -> dict:
 from repro.runtime.engine import (DecodeEngine, StallClock, make_nan_scan,
                                   make_slot_corrupt, make_slot_restore,
                                   make_slot_snapshot)
-from repro.runtime.faults import FaultPlan, SessionWedged
-from repro.runtime.kvpool import PagedKV, PoolExhausted
-from repro.runtime.scheduler import (CLASSES, DONE, QUEUED, REASON_POOL,
-                                     REASON_RETRIES, RUNNING, RequestHandle,
-                                     SlotScheduler)
+from repro.runtime.faults import FaultPlan, SessionCrashed, SessionWedged
+from repro.runtime.journal import Journal, read_events, replay
+from repro.runtime.kvpool import PagedKV, PoolExhausted, page_digests
+from repro.runtime.scheduler import (CANCELLED, CLASSES, DONE, FAILED, QUEUED,
+                                     REASON_CANCELLED, REASON_POOL,
+                                     REASON_RETRIES, REASON_SHED, RUNNING,
+                                     Request, RequestHandle, SlotScheduler,
+                                     deserialize_request, serialize_request)
 
 
 class ServeLoop:
@@ -272,7 +276,15 @@ class ServeSession:
                  faults: "FaultPlan | None" = None,
                  kv: "PagedKV | None" = None,
                  page_copy_fn: Callable | None = None,
-                 page_scrub_fn: Callable | None = None):
+                 page_scrub_fn: Callable | None = None,
+                 durable_dir: "str | Path | None" = None,
+                 snapshot_every: int | None = None,
+                 journal_fsync: bool | int = True,
+                 page_read_fn: Callable | None = None,
+                 page_flip_fn: Callable | None = None,
+                 scrub_pages: int = 2,
+                 crash_hook: Callable | None = None,
+                 resume: bool = False):
         if kv is not None and preempt:
             raise ValueError("paged KV serving does not support slot "
                              "preemption (slot snapshots do not carry page "
@@ -303,7 +315,10 @@ class ServeSession:
                                        aging_rounds=aging_rounds,
                                        prefix_score=(kv.match_len
                                                      if kv is not None
-                                                     else None))
+                                                     else None),
+                                       page_size=(kv.pool.page_size
+                                                  if kv is not None
+                                                  else None))
         self.clock = StallClock()
         # checkpoint/restore + fault machinery; the engine defaults cover
         # flat (batch-axis-0) caches, model caches pass steps.py helpers
@@ -345,6 +360,45 @@ class ServeSession:
         self._n_retries = 0
         self._deadline_miss = 0
         self._class_stats = {k: _class_counters() for k in CLASSES}
+        # -- durability + integrity layer --------------------------------
+        # journal: a write-ahead log of the request lifecycle (submit /
+        # admit / commit / finish) — a token is *delivered* only after its
+        # commit record is fsync-durable, so a crash-restart can replay to
+        # a consistent scheduler state with exactly-once delivery (greedy
+        # decode regenerates committed prefixes deterministically; harvest
+        # suppresses them instead of re-delivering).
+        self._durable_dir = Path(durable_dir) if durable_dir else None
+        self._snapshot_every = snapshot_every
+        self._page_read_fn = page_read_fn
+        self._page_flip_fn = page_flip_fn
+        self._scrub_pages = scrub_pages
+        self._crash_hook = crash_hook
+        self._journal: Journal | None = None
+        self._ckpt = None                   # lazily-built CheckpointManager
+        self._snapshots_taken = 0
+        self._last_snapshot_chunk = -1
+        self._restored_step: int | None = None
+        self._replayed_requests = 0         # live requests reinstalled
+        self._resubmitted = 0               # of those, requeued (re-prefill)
+        self._deduped_tokens = 0            # regenerated-but-suppressed
+        self._restore_s = 0.0               # measured MTTR of _recover()
+        self._prefix_pages_expected = 0     # admission-predicted page reuse
+        # requests that finished *before* a crash: their handles, rebuilt
+        # from the journal at restore (terminal, tokens = committed stream)
+        self.recovered: dict[int, RequestHandle] = {}
+        if self._durable_dir is not None:
+            self._durable_dir.mkdir(parents=True, exist_ok=True)
+            if resume:
+                self._recover()
+            self._journal = Journal(self._durable_dir / "journal.jsonl",
+                                    fsync=journal_fsync)
+            if resume:
+                self._journal.append({
+                    "ev": "restore",
+                    "snapshot_step": self._restored_step,
+                    "replayed": self._replayed_requests,
+                    "restore_s": self._restore_s})
+                self._journal.commit()
 
     # -- lazily-built fault/checkpoint programs ---------------------------
     def _get_snapshot_fn(self) -> Callable:
@@ -398,6 +452,12 @@ class ServeSession:
         req = self.scheduler.submit(prompt, max_new, klass=klass,
                                     deadline_s=deadline_s)
         self._class_stats[klass]["submitted"] += 1
+        if self._journal is not None:
+            self._journal.append({
+                "ev": "submit", "rid": req.rid,
+                "prompt": prompt.tolist(),
+                "max_new": int(max_new), "klass": klass,
+                "deadline_s": deadline_s})
         handle = RequestHandle(req)
         if not handle.done:             # the submission itself may have
             self.handles[req.rid] = handle      # been shed under overload
@@ -412,6 +472,11 @@ class ServeSession:
         if ok:
             self._n_cancelled += 1
             self._class_stats[handle.klass]["cancelled"] += 1
+            if self._journal is not None:
+                self._journal.append({
+                    "ev": "finish", "rid": handle.id,
+                    "status": "cancelled", "reason": REASON_CANCELLED})
+                self._journal.commit()
             if was_queued:                  # terminal now; running requests
                 self.handles.pop(handle.id, None)   # retire at the boundary
         return ok
@@ -422,12 +487,19 @@ class ServeSession:
         events (empty payload, done=True) and count them per class."""
         for req in self.scheduler.pop_shed():
             self._class_stats[req.klass]["shed"] += 1
+            if self._journal is not None:
+                self._journal.append({"ev": "finish", "rid": req.rid,
+                                      "status": "failed",
+                                      "reason": REASON_SHED})
             handle = self.handles.pop(req.rid, None)
             if handle is not None:
                 events.append((handle, _no_tokens(), True))
 
     def _fail_request(self, req, reason: str, events: list) -> None:
         self.scheduler.fail(req, reason)
+        if self._journal is not None:
+            self._journal.append({"ev": "finish", "rid": req.rid,
+                                  "status": "failed", "reason": reason})
         self._class_stats[req.klass]["failed"] += 1
         self._n_failed += 1
         handle = self.handles.pop(req.rid, None)
@@ -514,12 +586,19 @@ class ServeSession:
         one boundary (always a requeue, never terminal)."""
         forced = (self._faults is not None
                   and self._faults.page_alloc_failed(self._chunk_index))
+        # shared prefix pages are checksum-verified before a new request
+        # may attach to them; a mismatch quarantines the page and the
+        # admit falls back to fresh pages (recompute repairs the prefix)
+        verify = (self._verify_pages if self._page_read_fn is not None
+                  else None)
         kept: list = []
         for slot, req in fresh:
             try:
                 if forced:
                     raise PoolExhausted(0, self.kv.pool.free_pages)
-                alloc = self.kv.admit(slot, req.prompt, req.max_new)
+                alloc = self.kv.admit(slot, req.prompt, req.max_new,
+                                      verify=verify)
+                self._prefix_pages_expected += req.prefix_pages_expected
             except PoolExhausted:
                 self._n_pool_exhausted += 1
                 self.scheduler.release(slot)
@@ -543,7 +622,18 @@ class ServeSession:
             self._pending_deactivate.add(slot)
             if self.kv is not None:
                 if slot in self._pending_publish:
-                    self.kv.publish(slot)       # seed the prefix cache
+                    # seed the prefix cache; stamp a content checksum on
+                    # each published page so later admits / the background
+                    # scrub can detect silent corruption before reuse
+                    digests = None
+                    if self._page_read_fn is not None:
+                        pp = self.kv.publishable_pages(slot)
+                        if pp:
+                            arrs = self._page_read_fn(
+                                self.state, np.asarray(pp, np.int32))
+                            digests = dict(
+                                zip(pp, page_digests(arrs, len(pp))))
+                    self.kv.publish(slot, digests=digests)
                 self.kv.release(slot)
         self._pending_release.clear()
         self._pending_publish.clear()
@@ -611,6 +701,11 @@ class ServeSession:
                 req.snapshot = None
             self._pending_deactivate.clear()
             self._refill_failures = 0
+            if self._journal is not None:
+                for slot, req in granted:
+                    self._journal.append({"ev": "admit", "rid": req.rid,
+                                          "slot": slot,
+                                          "chunk": self._chunk_index})
         except Exception:
             # un-admit the round (reverse order restores queue positions);
             # pending deactivations retry at the next boundary. Bounded:
@@ -692,6 +787,184 @@ class ServeSession:
             self.kv.reset()     # the rebuilt pool holds no pages/tables
         self._wedged = False
 
+    # -- durability: journal + snapshots + integrity ---------------------
+    def handle(self, rid: int) -> RequestHandle | None:
+        """Look up a request handle by id — in-flight first, then the
+        `recovered` map (requests that finished before a crash, rebuilt
+        from the journal at restore)."""
+        return self.handles.get(rid) or self.recovered.get(rid)
+
+    def close(self) -> None:
+        """Land the in-flight snapshot write and close the journal
+        (idempotent). A failed async snapshot write raises here rather
+        than vanishing with the daemon thread."""
+        if self._ckpt is not None:
+            self._ckpt.wait()
+        if self._journal is not None:
+            self._journal.close()
+
+    def _verify_pages(self, pages) -> list[int]:
+        """Checksum-verify device pages against their publish-time stamps;
+        returns the mismatching page ids (unstamped pages are skipped)."""
+        pages = [int(p) for p in pages]
+        if not pages or self._page_read_fn is None:
+            return []
+        arrs = self._page_read_fn(self.state, np.asarray(pages, np.int32))
+        return self.kv.verify(pages, page_digests(arrs, len(pages)))
+
+    def _inject_bit_flip(self, page: int | None) -> None:
+        """Scripted silent-corruption fault: perturb one KV page on
+        device. Defaults to the first *stamped* (shared) page so the
+        checksum path — not luck — must catch it."""
+        if self._page_flip_fn is None or self.kv is None:
+            raise RuntimeError("a bit_flip fault needs a paged session "
+                               "(kv=) with page_flip_fn")
+        if page is None:
+            stamped = sorted(self.kv.checksums)
+            page = stamped[0] if stamped else 1
+        self.state = self._page_flip_fn(self.state,
+                                        np.asarray([page], np.int32))
+
+    def _live_requests(self) -> list:
+        """Every request the scheduler still holds: queued + slot-resident
+        (including done-pending-release — their finish records are already
+        journaled, so restore retires them and frees the slot)."""
+        out = list(self.scheduler.queued_requests())
+        out.extend(r for _, r in self.scheduler.running_requests())
+        return out
+
+    def _get_ckpt(self):
+        if self._ckpt is None:
+            from repro.checkpoint.manager import CheckpointManager
+            # sync writes: the state is small relative to a training
+            # checkpoint and an async writer thread contends with the
+            # poll loop for the GIL — measured slower than writing inline
+            self._ckpt = CheckpointManager(self._durable_dir / "snapshots",
+                                           keep=2, async_save=False)
+        return self._ckpt
+
+    def _save_snapshot(self) -> None:
+        """One bit-exact session snapshot: the device state pytree plus
+        the host bookkeeping needed to resume — serialized requests, page
+        pool / prefix cache / page tables (`kv.snapshot()`), and the
+        journal high-water mark that ties the snapshot to its log tail."""
+        meta = {
+            "chunk_index": self._chunk_index,
+            "journal_seq": self._journal.seq if self._journal else 0,
+            "next_rid": self.scheduler._next_rid,
+            "requests": [serialize_request(r)
+                         for r in self._live_requests()],
+            "quarantined_slots": self.scheduler.quarantined,
+            "pending_deactivate": sorted(self._pending_deactivate),
+            "kv": self.kv.snapshot() if self.kv is not None else None,
+        }
+        self._get_ckpt().save_session(self._chunk_index, self.state, meta)
+        self._snapshots_taken += 1
+        self._last_snapshot_chunk = self._chunk_index
+        if self._journal is not None:
+            self._journal.append({"ev": "snapshot",
+                                  "step": self._chunk_index})
+            self._journal.commit()
+
+    def _recover(self) -> None:
+        """Crash recovery: load the latest snapshot (if any), then replay
+        the journal over it. The snapshot is authoritative for device +
+        scheduler state; the journal contributes (a) terminal statuses and
+        the committed token stream per request, and (b) requests submitted
+        after the snapshot. Requests running at the snapshot resume in
+        their slot bit-identically; everything else in flight re-prefills
+        from its prompt with already-committed tokens suppressed at
+        harvest (exactly-once delivery). Never raises on a torn journal
+        tail — an fsync'd prefix is always recoverable."""
+        t0 = time.perf_counter()
+        summary = replay(read_events(self._durable_dir / "journal.jsonl"))
+        meta = None
+        if (self._durable_dir / "snapshots").exists():
+            step = self._get_ckpt().latest_session_step()
+            if step is not None:
+                state, meta = self._get_ckpt().restore_session(
+                    step, like=self.state)
+                self.state = jax.device_put(state)
+                self._restored_step = step
+                self._chunk_index = int(meta["chunk_index"])
+                self._last_snapshot_chunk = self._chunk_index
+                self.scheduler._next_rid = int(meta["next_rid"])
+                for s in meta.get("quarantined_slots") or []:
+                    self.scheduler._quarantined.add(int(s))
+                self._pending_deactivate.update(
+                    int(s) for s in meta.get("pending_deactivate") or [])
+                if self.kv is not None and meta.get("kv"):
+                    self.kv.load_snapshot(meta["kv"])
+        self.scheduler._next_rid = max(
+            self.scheduler._next_rid,
+            max(summary.requests, default=-1) + 1)
+        snap_reqs = ({int(d["rid"]): d for d in meta["requests"]}
+                     if meta else {})
+        occupied = {int(d["slot"]) for d in snap_reqs.values()
+                    if d.get("slot") is not None}
+        resumed: set[int] = set()
+        now = time.perf_counter()
+        for rid in sorted(set(summary.requests) | set(snap_reqs)):
+            rr = summary.requests.get(rid)
+            d = snap_reqs.get(rid)
+            committed = (rr.committed if rr is not None
+                         else list(d.get("tokens") or []))
+            status = rr.status if rr is not None else None
+            if status is None and d is not None and d["state"] in (
+                    DONE, CANCELLED, FAILED):
+                status = d["state"]
+            if d is not None:
+                req = deserialize_request(d)
+            elif rr is not None and rr.prompt is not None:
+                req = Request(rid=rid,
+                              prompt=np.asarray(rr.prompt, np.int32),
+                              max_new=int(rr.max_new), klass=rr.klass,
+                              deadline_s=rr.deadline_s)
+            else:
+                continue    # no submit record survived: nothing to rebuild
+            if status is not None:
+                # terminal before the crash: surface via `recovered`; any
+                # slot the snapshot still held for it frees below
+                req.state = status
+                req.tokens = list(committed)
+                if rr is not None and rr.reason is not None:
+                    req.fail_reason = rr.reason
+                req.slot = None
+                self.recovered[rid] = RequestHandle(req)
+                continue
+            # in flight at the crash
+            req.suppress_until = max(req.suppress_until, len(committed))
+            self._replayed_requests += 1
+            self._class_stats[req.klass]["submitted"] += 1
+            if (d is not None and d["state"] == RUNNING
+                    and d.get("slot") is not None):
+                slot = int(d["slot"])
+                req.state = RUNNING
+                req.slot = slot
+                req.started_at = now
+                self.scheduler._slots[slot] = req
+                resumed.add(slot)
+            else:
+                # queued at the snapshot, submitted after it, or preempted
+                # (device snapshots are not persisted): re-prefill from
+                # the prompt; the committed prefix regenerates suppressed
+                req.state = QUEUED
+                req.slot = None
+                req.tokens = []
+                req.hit_eos = False
+                req.snapshot = None
+                req.not_before = 0.0
+                self.scheduler._queues[req.klass].append(req)
+                self._resubmitted += 1
+            self.handles[rid] = RequestHandle(req)
+        # slots the snapshot had occupied but we did not resume: free the
+        # device row (and any page tables) before the first refill
+        for slot in sorted(occupied - resumed):
+            self._pending_deactivate.add(slot)
+            if self.kv is not None:
+                self.kv.release(slot)
+        self._restore_s = time.perf_counter() - t0
+
     def poll(self, timeout_s: float | None = None
              ) -> list[tuple[RequestHandle, np.ndarray, bool]]:
         """Advance the session by one chunk. Returns the chunk's events:
@@ -706,6 +979,12 @@ class ServeSession:
         if self._wedged:
             raise RuntimeError("session is wedged; call recover_wedged() "
                                "before polling again")
+        # scripted silent corruption lands *before* admission, so the
+        # admit-time checksum verify — not luck — must catch it before
+        # the page is shared with a new request
+        if self._faults is not None:
+            for page in self._faults.bit_flips(self._chunk_index):
+                self._inject_bit_flip(page)
         events, self._pending_events = self._pending_events, []
         self._admit_and_refill(events)
         if self.scheduler.running == 0:
@@ -759,16 +1038,27 @@ class ServeSession:
         n_emitted = 0
         for slot, req in list(self.scheduler.running_requests()):
             new = toks[slot][emit[slot]]
+            deliver = new
             if new.size:
                 if req.first_token_at is None:
                     req.first_token_at = now
                     self._ttfts.append(now - req.submitted_at)
                     self._class_stats[req.klass]["ttfts"].append(
                         now - req.submitted_at)
-                req.tokens.extend(int(t) for t in new)
+                base = req.emitted
+                new_list = new.tolist()
+                req.tokens.extend(new_list)
                 n_emitted += new.size
                 if self.eos_id is not None and np.any(new == self.eos_id):
                     req.hit_eos = True
+                skip = 0
+                if req.suppress_until > base:
+                    # exactly-once after restore: these tokens were
+                    # journal-committed (delivered) before the crash, and
+                    # greedy decode just regenerated them bit-identically
+                    skip = min(req.suppress_until - base, new.size)
+                    self._deduped_tokens += skip
+                    deliver = new[skip:]
             done = req.hit_eos or req.emitted >= req.max_new
             if done:
                 req.state = DONE
@@ -784,12 +1074,51 @@ class ServeSession:
                 if req.deadline_s is not None and lat > req.deadline_s:
                     cs["deadline_miss"] += 1
                     self._deadline_miss += 1
-            if new.size or done:
+            if deliver.size or done:
                 handle = self.handles.pop(req.rid) if done \
                     else self.handles[req.rid]      # retire done requests
-                events.append((handle, new, done))
+                events.append((handle, deliver, done))
+                if self._journal is not None:
+                    if deliver.size:
+                        self._journal.append({
+                            "ev": "commit", "rid": req.rid,
+                            "tokens": new_list[skip:],
+                            "chunk": chunk_idx})
+                    if done:
+                        self._journal.append({
+                            "ev": "finish", "rid": req.rid,
+                            "status": "done", "reason": None})
         self._emitted_total += n_emitted
         self._per_chunk_emitted.append(n_emitted)
+        # background integrity scrub: re-verify a bounded round-robin
+        # slice of the stamped (shared) pages each chunk; a bad page is
+        # quarantined and its cached chain dropped, so the prefix
+        # recomputes on next use instead of spreading. Runs after harvest
+        # (admit-time verify is the first line of defense — the scrub
+        # covers pages no admission is currently touching).
+        if (self.kv is not None and self._page_read_fn is not None
+                and self._scrub_pages):
+            cand = self.kv.scrub_candidates(self._scrub_pages)
+            for page in self._verify_pages(cand):
+                self.kv.quarantine_page(page)
+        if self._journal is not None:
+            # one fsync per chunk: everything above becomes durable before
+            # the events are handed to the caller
+            self._journal.commit()
+        # periodic bit-exact snapshot, taken at the end of the poll: the
+        # device is already synced by the harvest, so the capture's
+        # device_get costs no pipeline overlap, and every event of this
+        # chunk is committed at the same boundary — snapshot + journal
+        # tail always describe a consistent state
+        if (self._snapshot_every and self._durable_dir is not None
+                and self._chunk_index > 0
+                and self._chunk_index % self._snapshot_every == 0
+                and self._chunk_index != self._last_snapshot_chunk):
+            self._save_snapshot()
+        if self._faults is not None and self._faults.crashed(chunk_idx):
+            if self._crash_hook is not None:
+                self._crash_hook(chunk_idx)     # e.g. SIGKILL ourselves
+            raise SessionCrashed(chunk_idx)
         return events
 
     def stream(self, timeout_s: float | None = None
@@ -870,7 +1199,29 @@ class ServeSession:
         }
         if self.kv is not None:
             out["kv"] = dict(self.kv.stats(),
-                             pool_exhausted=self._n_pool_exhausted)
+                             pool_exhausted=self._n_pool_exhausted,
+                             prefix_pages_expected=self._prefix_pages_expected)
+        if self._durable_dir is not None or self._page_read_fn is not None:
+            kv = self.kv
+            out["durability"] = {
+                "journal_bytes": (self._journal.bytes_written
+                                  if self._journal else 0),
+                "journal_events": (self._journal.seq
+                                   if self._journal else 0),
+                "snapshots": self._snapshots_taken,
+                "snapshot_every": self._snapshot_every,
+                "restored_step": self._restored_step,
+                "replayed_requests": self._replayed_requests,
+                "resubmitted": self._resubmitted,
+                "recovered_terminal": len(self.recovered),
+                "deduped_tokens": self._deduped_tokens,
+                "integrity_checks": kv.integrity_checks if kv else 0,
+                "integrity_violations": kv.integrity_violations if kv else 0,
+                "integrity_repairs": kv.integrity_repairs if kv else 0,
+                "quarantined_pages": (len(kv.pool.quarantined)
+                                      if kv else 0),
+                "restore_s": self._restore_s,
+            }
         if self._faults is not None:
             out["faults"] = self._faults.summary()
         return out
