@@ -39,6 +39,19 @@ asserts exactly-once bit-identical completion, and a bit-flip on a
 published prefix page must be detected and repaired before any request
 reuses it — the row `check_gate.py --require recovery` enforces.
 
+A sixth scenario measures cluster-of-clusters scaling: the same
+per-group workload runs through `ShardedServeSessionProgram` at 1, 2,
+and 4 groups, each measurement in a child process under
+`--xla_force_host_platform_device_count=8` so every group owns a host
+device. Aggregate tokens/s and per-group stall ledgers roll up into
+`serve/groups_scaling`; scaling efficiency is normalized by the
+*attainable* parallelism `min(groups, cores)` — on a multi-core host
+that demands real near-linear scaling, on a single-core host (where G
+device computes time-share one core and ideal aggregate throughput is
+flat) it degenerates to a bound on the two-level scheduler's overhead.
+The row records `cores=` so the gate and readers know which regime was
+measured.
+
 Row format: serve/{continuous|static},us_per_token,tokens_per_s=..;...
             serve/class_{latency|throughput|best_effort},p99_lat_us,...
             serve/slo,us_per_token,preemptions=..;retries=..;shed=..
@@ -46,6 +59,8 @@ Row format: serve/{continuous|static},us_per_token,tokens_per_s=..;...
             serve/prefix_reuse,warm_ttft_p50_us,ttft_speedup_x=..
             serve/recovery,mttr_us,mttr_ms=..;overhead_pct=..;
                 bit_identical=1;exactly_once=1;violations=..;repairs=..
+            serve/groups_scaling,us_per_token@4g,tps1=..;tps2=..;tps4=..;
+                eff2=..;eff4=..;stall1=..;stall4=..;cores=..
 """
 
 from __future__ import annotations
@@ -390,6 +405,107 @@ def run_recovery(smoke: bool) -> list[str]:
     ]
 
 
+GROUP_SLOTS = 4                 # slots per serving group (full cell each)
+GROUP_CHUNK = 16                # coarse cadence: device work dominates the
+#   poll so group computes can actually overlap where cores allow
+GROUP_OUT_LENS = (8, 8, 16, 24)
+
+
+def _groups_child(n_groups: int, n_req: int, seed: int) -> None:
+    """One groups-scaling measurement, meant to run in a child process
+    under `--xla_force_host_platform_device_count=8` (so each group owns
+    a host device). Prints a single JSON line."""
+    import json
+    import os
+
+    import numpy as np
+
+    from repro.cluster import Cluster, ShardedServeSessionProgram
+    from repro.runtime.engine import StallClock
+
+    cluster = Cluster(ARCH)
+    max_seq = MAX_PROMPT + max(GROUP_OUT_LENS) + 1
+    program = cluster.compile(ShardedServeSessionProgram(
+        groups=n_groups, slots=GROUP_SLOTS, max_seq=max_seq,
+        max_prompt=MAX_PROMPT, chunk=GROUP_CHUNK))
+    params = program.init_params()
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 256, size=rng.integers(1, MAX_PROMPT + 1))
+               .astype(np.int32) for _ in range(n_req)]
+    outs = [int(v) for v in rng.choice(GROUP_OUT_LENS, size=n_req)]
+
+    # warm every group's compiled executable (first touch per device
+    # compiles; keep that out of the timed region)
+    warm = program.open(params=params)
+    for g in range(n_groups):
+        warm.groups[g].session.submit(prompts[0], GROUP_CHUNK)
+    warm.drain()
+    warm.close()
+
+    sess = program.open(params=params)
+    t0 = time.perf_counter()
+    for p, n in zip(prompts, outs):
+        sess.submit(p, n)
+    st = sess.drain()
+    wall = time.perf_counter() - t0
+    per_stall = [st["groups"][g]["stall"]["stall_pct"]
+                 for g in range(n_groups)]
+    print(json.dumps({
+        "groups": n_groups,
+        "devices": len({id(d) for d in sess.plan.devices}),
+        "cores": len(os.sched_getaffinity(0)),
+        "emitted": st["emitted_total"],
+        "wall_s": wall,
+        "tokens_per_s": st["emitted_total"] / wall,
+        "stall_pct": st["stall"]["stall_pct"],
+        "stall_max_pct": max(per_stall),
+        "occupancy_pct": st["occupancy_pct"],
+        "placed": st["placement"]["placed"],
+    }))
+    sess.close()
+
+
+def run_groups(smoke: bool) -> list[str]:
+    """Cluster-of-clusters scaling: the same per-group workload at 1, 2,
+    and 4 serving groups, one child process per point so each run gets a
+    fresh 8-host-device XLA platform. Efficiency is aggregate tokens/s
+    over `min(groups, cores)` times the 1-group rate — real scaling
+    where the host has the cores, a scheduler-overhead bound where it
+    does not (the row's `cores=` field says which was measured)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    per_group = 24 if smoke else 48
+    rows = {}
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+    for g in (1, 2, 4):
+        out = subprocess.run(
+            [sys.executable, __file__, "--groups-child", str(g),
+             str(per_group * g), "5"],
+            capture_output=True, text=True, env=env, check=True)
+        rows[g] = json.loads(out.stdout.strip().splitlines()[-1])
+    cores = rows[1]["cores"]
+    tps = {g: rows[g]["tokens_per_s"] for g in (1, 2, 4)}
+    eff = {g: tps[g] / (min(g, cores) * tps[1]) for g in (2, 4)}
+    return [
+        f"serve/groups_scaling,{1e6 / tps[4]:.1f},"
+        f"tps1={tps[1]:.1f};tps2={tps[2]:.1f};tps4={tps[4]:.1f};"
+        f"eff2={eff[2]:.3f};eff4={eff[4]:.3f};"
+        f"stall1={rows[1]['stall_pct']:.2f};"
+        f"stall4={rows[4]['stall_pct']:.2f};"
+        f"stall4_max={rows[4]['stall_max_pct']:.2f};"
+        f"cores={cores};devices={rows[4]['devices']};"
+        f"slots_per_group={GROUP_SLOTS};chunk={GROUP_CHUNK};"
+        f"requests_per_group={per_group}",
+    ]
+
+
 def main(smoke: bool = False) -> list[str]:
     import jax
 
@@ -458,8 +574,15 @@ def main(smoke: bool = False) -> list[str]:
         f"occupancy_pct={slo['occupancy_pct']:.1f}")
     lines += run_paged(smoke)
     lines += run_recovery(smoke)
+    lines += run_groups(smoke)
     return lines
 
 
 if __name__ == "__main__":
-    print("\n".join(main(smoke=True)))
+    import sys
+
+    if len(sys.argv) > 1 and sys.argv[1] == "--groups-child":
+        _groups_child(int(sys.argv[2]), int(sys.argv[3]),
+                      int(sys.argv[4]) if len(sys.argv) > 4 else 5)
+    else:
+        print("\n".join(main(smoke=True)))

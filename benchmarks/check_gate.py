@@ -25,6 +25,11 @@ Checks (each prints one `gate ok:`/`gate FAIL:` line; any FAIL exits 1):
           injected bit-flip was detected and repaired with no NaN
           reaching any sharer, and the fault-free journal+snapshot
           overhead stays under --recovery-tol percent)
+          `groups` (serve/groups_scaling row: positive aggregate tok/s
+          at 1/2/4 serving groups and efficiency >= 0.7 normalized by
+          attainable parallelism min(groups, cores); on hosts with >= 4
+          cores also monotone tok/s in group count and per-group stall
+          within 2x of single-group)
   baseline (optional, vs a committed copy of BENCH_table1.json):
           decode K16 stall_pct must not rise more than --stall-tol
           percentage points; serve continuous occupancy_pct must not drop
@@ -47,7 +52,7 @@ import sys
 from pathlib import Path
 
 REQUIREMENTS = ("tuned", "fused", "decode", "serve", "classes", "paged",
-                "recovery")
+                "recovery", "groups")
 
 CLASS_ROWS = ("serve/class_latency", "serve/class_throughput",
               "serve/class_best_effort")
@@ -185,6 +190,40 @@ def check_require(gate: Gate, record: dict, require: list[str],
                        f"durable overhead {ov:.1f}% <= {recovery_tol:.0f}% "
                        f"(measured tax ~5%; tol absorbs shared-runner "
                        f"fsync jitter)")
+    if "groups" in require:
+        by = _by_name(record.get("serve_continuous", []))
+        gate.check("serve/groups_scaling" in by, "groups",
+                   "serve/groups_scaling row present")
+        if "serve/groups_scaling" in by:
+            gr = _derived(by["serve/groups_scaling"])
+            tps = {g: float(gr.get(f"tps{g}", 0)) for g in (1, 2, 4)}
+            cores = int(gr.get("cores", 1))
+            gate.check(all(v > 0 for v in tps.values()), "groups",
+                       f"positive aggregate tok/s at 1/2/4 groups "
+                       f"({tps[1]:.0f}/{tps[2]:.0f}/{tps[4]:.0f})")
+            eff4 = float(gr.get("eff4", 0))
+            gate.check(eff4 >= 0.7, "groups",
+                       f"scaling efficiency at 4 groups {eff4:.2f} >= 0.70 "
+                       f"(normalized by min(groups, cores={cores}))")
+            if cores >= 4:
+                # real parallel hardware: demand monotone aggregate
+                # throughput and a bounded per-group stall blow-up
+                gate.check(tps[1] <= tps[2] <= tps[4], "groups",
+                           f"tok/s monotone in group count "
+                           f"({tps[1]:.0f} <= {tps[2]:.0f} <= {tps[4]:.0f})")
+                s1 = max(float(gr.get("stall1", 0)), 1e-9)
+                s4 = float(gr.get("stall4_max", "inf"))
+                gate.check(s4 <= 2.0 * max(s1, 5.0), "groups",
+                           f"per-group stall at 4 groups {s4:.1f}% within "
+                           f"2x of single-group {s1:.1f}%")
+            else:
+                # serialized host: G computes time-share the core, so
+                # ideal aggregate tok/s is flat — bound the sharding
+                # overhead instead of demanding impossible speedup
+                gate.check(tps[4] >= 0.7 * tps[1], "groups",
+                           f"sharding overhead bounded on {cores}-core "
+                           f"host ({tps[4]:.0f} vs {tps[1]:.0f} tok/s "
+                           f"single-group)")
 
 
 def check_baseline(gate: Gate, record: dict, baseline: dict,

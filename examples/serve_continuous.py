@@ -13,6 +13,13 @@ stats: slot occupancy (the MemPool PE-utilization analogue), tokens/s,
 and the StallClock ledger.
 
     PYTHONPATH=src python examples/serve_continuous.py --slots 4 --requests 12
+
+`--groups N` (N > 1) shards the session across N serving groups
+(`ShardedServeSessionProgram`): each group owns a full slot pool on its
+own device slice and a two-level scheduler places arrivals — run it
+under `XLA_FLAGS=--xla_force_host_platform_device_count=8` to give every
+group its own host device. The drive loop is unchanged: the sharded
+session speaks the same submit/poll/stats API.
 """
 
 import argparse
@@ -24,13 +31,17 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.cluster import Cluster, ServeSessionProgram
+from repro.cluster import (Cluster, ServeSessionProgram,
+                           ShardedServeSessionProgram)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-125m")
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slot-pool size (per group when --groups > 1)")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="serving groups; > 1 shards the session")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--rate", type=float, default=8.0,
                     help="mean request arrivals per second (Poisson)")
@@ -41,8 +52,11 @@ def main():
 
     cluster = Cluster(args.arch + "-smoke")
     cfg = cluster.arch
-    program = cluster.compile(ServeSessionProgram(
-        slots=args.slots, max_seq=64, max_prompt=8, chunk=args.chunk))
+    common = dict(slots=args.slots, max_seq=64, max_prompt=8,
+                  chunk=args.chunk)
+    program = cluster.compile(
+        ShardedServeSessionProgram(groups=args.groups, **common)
+        if args.groups > 1 else ServeSessionProgram(**common))
     session = program.open()
 
     rng = np.random.default_rng(args.seed)
@@ -51,12 +65,13 @@ def main():
                .astype(np.int32) for _ in range(args.requests)]
     out_lens = rng.choice([8, 12, 16, 24, 32, 48], size=args.requests)
 
-    print(f"arch={cfg.name} slots={args.slots} chunk={args.chunk} — "
+    shard = f" groups={args.groups}" if args.groups > 1 else ""
+    print(f"arch={cfg.name} slots={args.slots} chunk={args.chunk}{shard} — "
           f"{args.requests} requests, ~{args.rate}/s Poisson arrivals, "
           f"prompts 1-8, outputs {sorted(set(out_lens.tolist()))}")
     t0 = time.perf_counter()
     next_up = 0
-    while next_up < args.requests or session.scheduler.busy:
+    while next_up < args.requests or session.busy:
         now = time.perf_counter() - t0
         while next_up < args.requests and arrivals[next_up] <= now:
             session.submit(prompts[next_up], int(out_lens[next_up]))
@@ -64,7 +79,10 @@ def main():
         events = session.poll()
         for handle, _toks, done in events:
             if done:
-                print(f"  req {handle.id}: {handle.tokens.size} tokens, "
+                where = (f" [g{handle.group}]"
+                         if handle.group is not None else "")
+                print(f"  req {handle.id}{where}: "
+                      f"{handle.tokens.size} tokens, "
                       f"ttft {handle.ttft_s * 1e3:.0f}ms, "
                       f"latency {handle.latency_s * 1e3:.0f}ms")
         if not events and next_up < args.requests:
@@ -80,6 +98,11 @@ def main():
           f"latency p99={st['latency_ms']['p99']:.0f}ms")
     print(f"engine: {stall['host_syncs']} host syncs, "
           f"stall={stall['stall_pct']:.1f}%, queue peak {st['queue_peak']}")
+    if args.groups > 1:
+        placed = st["placement"]["placed"]
+        print(f"placement: {placed} per group, "
+              f"locality rate {st['placement']['locality_rate']:.0%}, "
+              f"quarantined {st['placement']['quarantined_groups']}")
 
 
 if __name__ == "__main__":

@@ -13,8 +13,10 @@ from repro.cluster.policy import (KernelPolicy, as_policy,  # noqa: F401
 from repro.kernels.tunedb import TuneDB  # noqa: F401  (dependency-light)
 
 _SESSION_EXPORTS = ("Cluster", "Program", "TrainProgram", "ServeProgram",
-                    "ServeSessionProgram", "DryRunProgram", "BenchProgram",
+                    "ServeSessionProgram", "ShardedServeSessionProgram",
+                    "DryRunProgram", "BenchProgram",
                     "CompiledTrain", "CompiledServe", "CompiledServeSession",
+                    "CompiledShardedServeSession",
                     "CompiledDryRun", "CompiledBench")
 
 __all__ = list(_SESSION_EXPORTS) + [

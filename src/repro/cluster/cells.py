@@ -57,6 +57,29 @@ def layer_gather_specs(cfg, mesh, rules):
             isinstance(e, (str, type(None))) for e in x))
 
 
+def group_devices(mesh, n_groups: int) -> tuple:
+    """Slice a mesh's devices into per-group assignments (tiles -> groups).
+
+    The sharded serving session builds one session cell per group and
+    pins each group's params/state to its device, so group g's decode
+    chunks run concurrently with every other group's. Devices are taken
+    in the mesh's data-axis order; with fewer devices than groups the
+    assignment wraps round-robin — groups share a device (degraded but
+    functional: the scheduler semantics are unchanged, only the compute
+    overlap is lost), which is what single-device CPU smoke runs hit.
+    """
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+    try:
+        import numpy as np
+        devs = [d for d in np.asarray(mesh.devices).reshape(-1)]
+    except AttributeError:
+        devs = list(jax.devices())
+    if not devs:
+        devs = list(jax.devices())
+    return tuple(devs[g % len(devs)] for g in range(n_groups))
+
+
 def build_cell(cfg, shape, mesh, rules, fsdp_gather: bool = False,
                policy=None, decode_chunk: int = 1, session: bool = False,
                max_prompt: int = 8, paged: bool = False,

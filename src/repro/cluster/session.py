@@ -146,6 +146,30 @@ class ServeSessionProgram:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardedServeSessionProgram(ServeSessionProgram):
+    """Cluster-of-clusters serving: `groups` full session cells behind
+    one `submit/poll/stream/cancel/drain` surface.
+
+    Mirrors MemPool's tiles -> groups -> cluster hierarchy on the device
+    mesh: each serving group owns a complete session cell (slot pool,
+    paged KV pool + prefix cache, stall ledger, journal) pinned to its
+    own device, and a two-level scheduler places each request in a group
+    (locality-aware: warm prefix-cache overlap + load, scored with the
+    paper's topology model) before the group's own slot scheduler takes
+    over. All `ServeSessionProgram` knobs apply *per group* — e.g.
+    `slots=4, groups=2` is 8 slots total, two pools of 4.
+
+    `open()` returns a `runtime.ShardedServeSession`; with `groups=1` it
+    is token-for-token identical to `ServeSessionProgram.open()` (same
+    cell, same scheduler, a trivial placement layer) and its durable
+    directory stays restorable by either program. `run()` (the one-shot
+    legacy path) is not defined for sharded sessions.
+    """
+
+    groups: int = 2                        # serving groups (session cells)
+
+
+@dataclasses.dataclass(frozen=True)
 class DryRunProgram:
     """Lower + compile one (arch x shape) cell on this cluster's mesh and
     extract memory/cost/collective analysis — no allocation."""
@@ -276,6 +300,7 @@ class Cluster:
         keyed on (spec, arch, mesh, policy knobs)."""
         builders = {TrainProgram: CompiledTrain, ServeProgram: CompiledServe,
                     ServeSessionProgram: CompiledServeSession,
+                    ShardedServeSessionProgram: CompiledShardedServeSession,
                     DryRunProgram: CompiledDryRun, BenchProgram: CompiledBench}
         try:
             builder = builders[type(spec)]
@@ -596,7 +621,8 @@ class CompiledServeSession(Program):
 
     def open(self, params=None, faults=None, durable_dir=None,
              resume: bool = False, crash_hook=None,
-             snapshot_every=None, journal_fsync=None):
+             snapshot_every=None, journal_fsync=None,
+             device=None, journal_group=None):
         """A fresh `ServeSession` over this compiled cell (own slot pool,
         queue, scheduler, and stall clock). `faults` arms a
         `runtime.FaultPlan` against the session (chaos testing).
@@ -607,12 +633,22 @@ class CompiledServeSession(Program):
         `resume=True` recovers from an existing `durable_dir` after a
         crash (see `restore()`). `snapshot_every` / `journal_fsync`
         override the spec's values per session — they are host-side
-        knobs, so no recompile (`None` keeps the spec's choice)."""
+        knobs, so no recompile (`None` keeps the spec's choice).
+
+        `device` pins the session's params and pool state to one device
+        (the sharded session places each group on its own mesh slice);
+        `journal_group` tags every journal event with the owning group id
+        (see `runtime.Journal`). Both default to the single-session
+        behaviour: default device, untagged journal."""
         from repro.runtime import ServeSession
 
         spec = self.spec
         if params is None:
             params = self.init_params()
+        make_state = self._make_state
+        if device is not None:
+            params = jax.device_put(params, device)
+            make_state = lambda: jax.device_put(self._make_state(), device)
         kv = None
         if spec.paged:
             from repro.runtime.kvpool import PagedKV
@@ -620,7 +656,7 @@ class CompiledServeSession(Program):
                          self._pages_per_slot,
                          prefix_cache=spec.prefix_cache)
         sess = ServeSession(self._chunk_fn, self._refill_fn, params,
-                            self._make_state(),
+                            make_state(),
                             n_slots=spec.slots, chunk=spec.chunk,
                             max_prompt=spec.max_prompt, max_seq=spec.max_seq,
                             eos_id=spec.eos_id, max_queue=spec.max_queue,
@@ -632,7 +668,7 @@ class CompiledServeSession(Program):
                             restore_fn=self._restore_fn,
                             nan_scan_fn=self._nan_scan_fn,
                             corrupt_fn=self._corrupt_fn,
-                            state_factory=self._make_state,
+                            state_factory=make_state,
                             watchdog_s=spec.watchdog_s,
                             max_retries=spec.max_retries,
                             retry_backoff_s=spec.retry_backoff_s,
@@ -652,7 +688,8 @@ class CompiledServeSession(Program):
                             page_flip_fn=self._page_flip_fn,
                             scrub_pages=spec.scrub_pages,
                             crash_hook=crash_hook,
-                            resume=resume)
+                            resume=resume,
+                            journal_group=journal_group)
         self._last_session = sess
         return sess
 
@@ -729,6 +766,117 @@ class CompiledServeSession(Program):
         if self._last_session is not None:
             out["session"] = self._last_session.stats()
         return out
+
+
+SHARD_MANIFEST = "manifest.json"
+SHARD_MANIFEST_KIND = "repro-sharded-serve"
+
+
+class CompiledShardedServeSession(CompiledServeSession):
+    """N serving groups over one compiled session cell.
+
+    The chunk/refill/fault programs are compiled once (inherited from
+    `CompiledServeSession`); `open()` instantiates them `spec.groups`
+    times — per-group params/state pinned to that group's device from
+    `cells.group_devices` — and wires the cells behind a
+    `runtime.ShardedServeSession` with a locality-aware `MeshScheduler`.
+
+    Durable layout: the root directory holds a ``manifest.json``
+    (`{"kind": "repro-sharded-serve", "version": 1, "groups": G}`) and
+    one complete per-session durable dir per group (``group00/`` ...),
+    each journal tagged with its group id. With ``groups=1`` the root
+    directory *is* the group's durable dir — a plain
+    `ServeSessionProgram` restore reads it unchanged, and a sharded
+    restore accepts a plain session's manifest-less directory.
+    """
+
+    kind = "serve_session_sharded"
+
+    def __init__(self, cluster, spec: ShardedServeSessionProgram, policy):
+        if spec.groups < 1:
+            raise ValueError(f"groups must be >= 1, got {spec.groups}")
+        super().__init__(cluster, spec, policy)
+
+    def _group_dirs(self, durable_dir, resume: bool) -> list:
+        """Per-group durable dirs under the root, manifest-checked."""
+        import json
+        from pathlib import Path
+
+        spec = self.spec
+        root = Path(durable_dir)
+        root.mkdir(parents=True, exist_ok=True)
+        mpath = root / SHARD_MANIFEST
+        if resume and mpath.exists():
+            m = json.loads(mpath.read_text(encoding="utf-8"))
+            if (m.get("kind") != SHARD_MANIFEST_KIND
+                    or m.get("groups") != spec.groups):
+                raise ValueError(
+                    f"durable dir {root} was written by "
+                    f"{m.get('kind')!r} with groups={m.get('groups')}; "
+                    f"this program has groups={spec.groups}")
+        elif resume and spec.groups != 1:
+            # manifest-less dir: a plain single session wrote it; only a
+            # 1-group sharded session can adopt it
+            raise ValueError(
+                f"durable dir {root} has no {SHARD_MANIFEST} — it holds a "
+                f"single-session journal; restore it with groups=1 (or "
+                f"ServeSessionProgram), not groups={spec.groups}")
+        else:
+            mpath.write_text(json.dumps(
+                {"kind": SHARD_MANIFEST_KIND, "version": 1,
+                 "groups": spec.groups}) + "\n", encoding="utf-8")
+        if spec.groups == 1:
+            return [root]
+        return [root / f"group{g:02d}" for g in range(spec.groups)]
+
+    def open(self, params=None, faults=None, durable_dir=None,
+             resume: bool = False, crash_hook=None,
+             snapshot_every=None, journal_fsync=None):
+        """A live `runtime.ShardedServeSession`: `spec.groups` session
+        cells, each on its own device slice, behind the single-session
+        API. `faults` arms group 0 when given one `FaultPlan`, or each
+        group when given a sequence (None entries skip a group)."""
+        from repro.runtime.groups import (GroupPlan, GroupRuntime,
+                                          MeshScheduler,
+                                          ShardedServeSession)
+
+        spec = self.spec
+        G = spec.groups
+        if params is None:
+            params = self.init_params()
+        devices = cells.group_devices(self.cluster.mesh, G)
+        # single distinct device (CPU smoke, groups=1): skip device_put so
+        # the cell is bit-identical to the unsharded session's
+        distinct = len({id(d) for d in devices}) > 1
+        plans = (list(faults) if isinstance(faults, (list, tuple))
+                 else [faults] + [None] * (G - 1))
+        if len(plans) != G:
+            raise ValueError(f"faults: expected {G} plans, got {len(plans)}")
+        dirs = (self._group_dirs(durable_dir, resume)
+                if durable_dir is not None else [None] * G)
+        groups = []
+        for g in range(G):
+            sess = super().open(
+                params=params, faults=plans[g],
+                durable_dir=(str(dirs[g]) if dirs[g] is not None else None),
+                resume=resume, crash_hook=crash_hook,
+                snapshot_every=snapshot_every,
+                journal_fsync=journal_fsync,
+                device=devices[g] if distinct else None,
+                journal_group=g)
+            groups.append(GroupRuntime(gid=g, session=sess,
+                                       device=devices[g]))
+        mesh = MeshScheduler(
+            G, page_size=spec.page_size if spec.paged else 16)
+        plan = GroupPlan(n_groups=G, devices=devices)
+        sharded = ShardedServeSession(groups, mesh=mesh, plan=plan)
+        self._last_session = sharded
+        return sharded
+
+    def run(self, params=None, prompt=None, max_new=None) -> dict:
+        raise NotImplementedError(
+            "the one-shot legacy path is not defined for sharded "
+            "sessions; use open() + submit/drain")
 
 
 class CompiledDryRun(Program):

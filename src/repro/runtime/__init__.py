@@ -4,6 +4,8 @@ from .engine import (DecodeEngine, StallClock, init_session_state,  # noqa: F401
                      make_slot_restore, make_slot_snapshot, make_train_chunk)
 from .faults import (Fault, FaultPlan, InjectedFault,  # noqa: F401
                      SessionCrashed, SessionWedged)
+from .groups import (GroupPlan, GroupRuntime, GroupView,  # noqa: F401
+                     MeshScheduler, ShardedServeSession)
 from .journal import (Journal, ReplayedRequest, ReplaySummary,  # noqa: F401
                       read_events, replay)
 from .kvpool import PagedKV, PagePool, PrefixCache, page_digests  # noqa: F401

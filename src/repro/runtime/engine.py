@@ -99,6 +99,34 @@ class StallClock:
             "stall_pct": 100.0 * self.dispatch_gap_s / max(wall, 1e-12),
         }
 
+    @staticmethod
+    def merge(clocks) -> "StallClock":
+        """Fold per-group ledgers into one aggregate clock.
+
+        Additive counters (syncs, gaps, device waits) sum; wall time does
+        NOT — concurrent ledgers cover the same wall-clock span, so the
+        merged clock keeps the earliest member start and `report()`
+        divides the summed gap by ONE shared wall, never N overlapping
+        copies of it. The merged `stall_pct` is therefore host-idle
+        device-seconds per wall second — a load-average-style figure
+        that can exceed 100% when several groups stall concurrently
+        inside the same span (cap: 100% x n_groups). Per-group ratios
+        live in each member's own report. An empty merge is a fresh
+        clock.
+        """
+        clocks = list(clocks)
+        if not clocks:
+            return StallClock()
+        out = StallClock(
+            host_syncs=sum(c.host_syncs for c in clocks),
+            dispatch_gap_s=sum(c.dispatch_gap_s for c in clocks),
+            device_wait_s=sum(c.device_wait_s for c in clocks),
+            _t_start=min(c._t_start for c in clocks))
+        ends = [c._last_sync_end for c in clocks
+                if c._last_sync_end is not None]
+        out._last_sync_end = max(ends) if ends else None
+        return out
+
 
 # ----------------------------------------------------------------------------
 # Scan-compiled multi-token decode

@@ -68,12 +68,20 @@ class Journal:
     commit, fsync every Kth (Redis ``appendfsync``-style: the power-
     loss window is bounded by K polls, process-crash consistency is
     unchanged).
+
+    ``tag`` (optional) is a dict merged into every appended event — the
+    sharded session passes ``{"group": g}`` so each group's journal is
+    self-describing (a restore can verify a journal belongs to the group
+    directory it sits in). Untagged journals from single-group sessions
+    replay identically: the tag is additive, never required.
     """
 
     def __init__(self, path: str | os.PathLike, *,
-                 fsync: bool | int = True):
+                 fsync: bool | int = True,
+                 tag: dict | None = None):
         self.path = Path(path)
         self.fsync = fsync
+        self.tag = dict(tag or {})
         self.events_written = 0
         self.commits = 0
         self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -94,7 +102,7 @@ class Journal:
             raise ValueError(f"unknown journal event {ev.get('ev')!r}; "
                              f"expected one of {EVENTS}")
         seq = self.seq
-        self._f.write(json.dumps({"seq": seq, **ev}) + "\n")
+        self._f.write(json.dumps({"seq": seq, **self.tag, **ev}) + "\n")
         self.seq += 1
         self.events_written += 1
         return seq
@@ -217,6 +225,8 @@ class ReplayedRequest:
     admit_seq: int | None = None        # last admit (re-admits overwrite)
     finish_seq: int | None = None
     slot: int | None = None
+    group: int | None = None            # serving group (sharded sessions;
+    #   None on untagged single-group journals)
 
 
 @dataclasses.dataclass
@@ -251,6 +261,8 @@ def replay(events: Iterable[dict]) -> ReplaySummary:
             continue
         rid = int(ev["rid"])
         r = s.requests.setdefault(rid, ReplayedRequest(rid=rid))
+        if "group" in ev:
+            r.group = int(ev["group"])
         if kind == "submit":
             r.prompt = [int(t) for t in ev["prompt"]]
             r.max_new = int(ev["max_new"])

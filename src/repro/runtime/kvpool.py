@@ -208,6 +208,7 @@ class _PrefixEntry:
     tokens: np.ndarray     # the page's token content (page_size,)
     parent: bytes = b"root"    # chain key of the previous page's entry
     hits: int = 0
+    last_used: int = 0     # logical tick of the last insert/match touch
 
 
 class PrefixCache:
@@ -216,16 +217,25 @@ class PrefixCache:
     `insert(tokens, pages)` publishes the fully written prompt pages of a
     completed request (each gains a cache reference so it outlives its
     owner); `match(tokens)` walks the chain and returns the longest run
-    of shared pages covering a prefix of `tokens`. Entries are evicted
-    LRU-ish via `evict(n_pages)` when the pool runs dry.
+    of shared pages covering a prefix of `tokens`. Under memory pressure
+    `evict(n_pages)` drops entries cold-first (LRU by logical touch
+    tick), preferring pages the cache is the sole owner of — evicting
+    those actually frees memory, instead of only reclaiming pages that
+    already had no references.
     """
 
     def __init__(self, pool: PagePool):
         self.pool = pool
         self._chain: dict[bytes, _PrefixEntry] = {}
-        self._order: list[bytes] = []          # insertion order for evict
+        self._order: list[bytes] = []          # insertion order (stable)
         self.hits = 0
         self.misses = 0
+        self.evictions = 0        # entries dropped under memory pressure
+        self._tick = 0            # logical clock for LRU recency
+
+    def _touch(self) -> int:
+        self._tick += 1
+        return self._tick
 
     def __len__(self) -> int:
         return len(self._chain)
@@ -242,12 +252,14 @@ class PrefixCache:
             page_toks = tokens[k * ps:(k + 1) * ps]
             parent, key = key, _page_key(key, page_toks)
             if key in self._chain:
+                self._chain[key].last_used = self._touch()   # re-warmed
                 continue                        # prefix already published
             page = int(pages[k])
             if page == TRASH_PAGE or page in self.pool.quarantined:
                 break
             self.pool.ref([page])
-            self._chain[key] = _PrefixEntry(page, page_toks.copy(), parent)
+            self._chain[key] = _PrefixEntry(page, page_toks.copy(), parent,
+                                            last_used=self._touch())
             self._order.append(key)
             published += 1
         return published
@@ -267,6 +279,7 @@ class PrefixCache:
             if e is None or not np.array_equal(e.tokens, page_toks):
                 break
             e.hits += 1
+            e.last_used = self._touch()
             out.append(e.page)
         if out:
             self.hits += 1
@@ -275,12 +288,44 @@ class PrefixCache:
         return out
 
     def evict(self, n_pages: int) -> list[int]:
-        """Drop cache references until `n_pages` pages were freed (or the
-        cache is empty). Returns the freed page ids."""
+        """Drop cache entries until `n_pages` pages were freed (or the
+        cache is empty), coldest first (LRU by last insert/match touch).
+        Returns the freed page ids.
+
+        Entries whose page the cache is the *sole* owner of go first:
+        dropping one of those actually frees a page, where dropping an
+        entry still shared with a running slot frees nothing now and
+        only loses future reuse — those are the last resort. Dropping an
+        entry cascades to its chain descendants (a suffix is unreachable
+        without its prefix), which LRU order already favours: a match
+        touches every entry on its path, so a parent is never colder
+        than its children."""
         freed: list[int] = []
-        while self._order and len(freed) < n_pages:
-            key = self._order.pop(0)
-            e = self._chain.pop(key)
+        while self._chain and len(freed) < n_pages:
+            key = min(
+                self._chain,
+                key=lambda k: (
+                    int(self.pool.refcount[self._chain[k].page]) > 1,
+                    self._chain[k].last_used))
+            freed += self._drop_chain(key)
+        return freed
+
+    def _drop_chain(self, key: bytes) -> list[int]:
+        """Evict one entry and (transitively) its descendants; returns
+        the pages that became free."""
+        doomed = {key}
+        changed = True
+        while changed:
+            changed = False
+            for k, e in self._chain.items():
+                if k not in doomed and e.parent in doomed:
+                    doomed.add(k)
+                    changed = True
+        freed: list[int] = []
+        for k in doomed:
+            e = self._chain.pop(k)
+            self._order.remove(k)
+            self.evictions += 1
             freed += self.pool.release([e.page])
         return freed
 
@@ -535,7 +580,9 @@ class PagedKV:
             self._slot_prompt[s] = None
         self.pool = PagePool(self.pool.n_pages, self.pool.page_size)
         if self.prefix is not None:
+            evictions = self.prefix.evictions   # lifetime counter survives
             self.prefix = PrefixCache(self.pool)
+            self.prefix.evictions = evictions
         self.checksums = {}
         self._scrub_cursor = 0
 
@@ -584,12 +631,16 @@ class PagedKV:
             "chain": None if self.prefix is None else [
                 {"key": k.hex(), "parent": e.parent.hex(),
                  "page": e.page, "tokens": e.tokens.tolist(),
-                 "hits": e.hits}
+                 "hits": e.hits, "last_used": e.last_used}
                 for k in self.prefix._order
                 for e in (self.prefix._chain[k],)],
             "prefix_hits": 0 if self.prefix is None else self.prefix.hits,
             "prefix_misses": (0 if self.prefix is None
                               else self.prefix.misses),
+            "prefix_evictions": (0 if self.prefix is None
+                                 else self.prefix.evictions),
+            "prefix_tick": (0 if self.prefix is None
+                            else self.prefix._tick),
             "checksums": {str(p): d.hex()
                           for p, d in sorted(self.checksums.items())},
             "pages_shared_total": self.pages_shared_total,
@@ -621,10 +672,13 @@ class PagedKV:
                 self.prefix._chain[key] = _PrefixEntry(
                     int(rec["page"]),
                     np.asarray(rec["tokens"], np.int32),
-                    bytes.fromhex(rec["parent"]), int(rec["hits"]))
+                    bytes.fromhex(rec["parent"]), int(rec["hits"]),
+                    last_used=int(rec.get("last_used", 0)))
                 self.prefix._order.append(key)
             self.prefix.hits = int(d.get("prefix_hits", 0))
             self.prefix.misses = int(d.get("prefix_misses", 0))
+            self.prefix.evictions = int(d.get("prefix_evictions", 0))
+            self.prefix._tick = int(d.get("prefix_tick", 0))
         self.checksums = {int(p): bytes.fromhex(h)
                           for p, h in d.get("checksums", {}).items()}
         self.pages_shared_total = int(d["pages_shared_total"])
@@ -646,5 +700,6 @@ class PagedKV:
         if self.prefix is not None:
             out.update(prefix_entries=len(self.prefix),
                        prefix_hits=self.prefix.hits,
-                       prefix_misses=self.prefix.misses)
+                       prefix_misses=self.prefix.misses,
+                       evictions=self.prefix.evictions)
         return out

@@ -137,6 +137,9 @@ class RequestHandle:
 
     def __init__(self, req: Request):
         self._req = req
+        # serving group the request was placed in (sharded sessions
+        # stamp this at submit; None under a plain single session)
+        self.group: int | None = None
 
     @property
     def id(self) -> int:
@@ -481,6 +484,19 @@ class SlotScheduler:
     @property
     def busy(self) -> bool:
         return self.queued > 0 or self.running > 0
+
+    def load_view(self) -> dict:
+        """Host-side load snapshot for the two-level placement layer
+        (`runtime/groups.py`): how much of this slot pool's capacity is
+        spoken for right now, in plain scalars so `MeshScheduler` can
+        score groups without touching scheduler internals."""
+        usable = self.usable_slots
+        return {"usable_slots": usable,
+                "free_slots": len(self.free_slots()),
+                "running": self.running,
+                "queued": self.queued,
+                "max_queue": self.max_queue,
+                "occupancy": self.running / max(usable, 1)}
 
 
 # ----------------------------------------------------------------------------

@@ -284,7 +284,8 @@ class ServeSession:
                  page_flip_fn: Callable | None = None,
                  scrub_pages: int = 2,
                  crash_hook: Callable | None = None,
-                 resume: bool = False):
+                 resume: bool = False,
+                 journal_group: int | None = None):
         if kv is not None and preempt:
             raise ValueError("paged KV serving does not support slot "
                              "preemption (slot snapshots do not carry page "
@@ -386,12 +387,17 @@ class ServeSession:
         # requests that finished *before* a crash: their handles, rebuilt
         # from the journal at restore (terminal, tokens = committed stream)
         self.recovered: dict[int, RequestHandle] = {}
+        # serving-group id stamped on every journal event (sharded
+        # sessions; None leaves the single-group format untouched)
+        self._journal_group = journal_group
         if self._durable_dir is not None:
             self._durable_dir.mkdir(parents=True, exist_ok=True)
             if resume:
                 self._recover()
             self._journal = Journal(self._durable_dir / "journal.jsonl",
-                                    fsync=journal_fsync)
+                                    fsync=journal_fsync,
+                                    tag=(None if journal_group is None
+                                         else {"group": journal_group}))
             if resume:
                 self._journal.append({
                     "ev": "restore",
@@ -1120,6 +1126,12 @@ class ServeSession:
                 self._crash_hook(chunk_idx)     # e.g. SIGKILL ourselves
             raise SessionCrashed(chunk_idx)
         return events
+
+    @property
+    def busy(self) -> bool:
+        """True while any request is queued, running, or has terminal
+        events the next `poll()` will surface."""
+        return self.scheduler.busy or bool(self._pending_events)
 
     def stream(self, timeout_s: float | None = None
                ) -> Iterator[tuple[RequestHandle, np.ndarray, bool]]:
